@@ -1,0 +1,115 @@
+//! Decision-latency bench (paper §IV-E): per-invocation cost of each
+//! policy's decide(), including both LACE-RL inference paths.
+//!
+//! Paper claims: DQN inference ≈ 15 µs/invocation; DPSO ≈ 4,600× slower.
+//! Here we report: native Rust MLP, PJRT (AOT Pallas kernel), PJRT
+//! (pure-jnp ablation), DPSO, and the trivial baselines.
+
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::lace_rl::{LaceRlPolicy, PjrtQ};
+use lace_rl::policy::native_mlp::NativeMlp;
+use lace_rl::policy::{
+    CarbonMin, DecisionContext, FixedTimeout, KeepAlivePolicy, LatencyMin,
+};
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, QNetInfer};
+use lace_rl::trace::model::{FunctionProfile, Runtime, TriggerType};
+use lace_rl::util::bench::{bench, black_box};
+
+fn profile() -> FunctionProfile {
+    FunctionProfile {
+        id: 0,
+        runtime: Runtime::Custom,
+        trigger: TriggerType::Http,
+        mem_mb: 128.0,
+        cpu_cores: 1.0,
+        cold_start_s: 4.5,
+        mean_exec_s: 0.8,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== decision latency (per policy decide() call) ==\n");
+    let prof = profile();
+    let ctx = DecisionContext {
+        t: 1234.5,
+        func: &prof,
+        ci: 420.0,
+        reuse_probs: [0.15, 0.35, 0.55, 0.8, 0.92],
+        lambda_carbon: 0.5,
+        idle_power_w: 1.25,
+        next_arrival_gap: None,
+    };
+
+    let mut fixed = FixedTimeout::huawei();
+    bench("fixed-60s/decide", || {
+        black_box(fixed.decide(black_box(&ctx)));
+    });
+    let mut lat = LatencyMin;
+    bench("latency-min/decide", || {
+        black_box(lat.decide(black_box(&ctx)));
+    });
+    let mut car = CarbonMin;
+    bench("carbon-min/decide", || {
+        black_box(car.decide(black_box(&ctx)));
+    });
+
+    // LACE-RL native fast path.
+    let art = ArtifactSet::open(&artifacts::default_dir())?;
+    let params = art.best_params()?;
+    let mut lace_native = LaceRlPolicy::new(NativeMlp::new(params.clone()));
+    let native = bench("lace-rl(native)/decide", || {
+        black_box(lace_native.decide(black_box(&ctx)));
+    });
+
+    // LACE-RL AOT paths via PJRT.
+    let runtime = PjrtRuntime::cpu()?;
+    let dims = art.manifest.dims();
+    let mut lace_pjrt = LaceRlPolicy::new(PjrtQ::new(
+        QNetInfer::new(runtime.load_hlo_text(art.infer_path(1).to_str().unwrap())?, 1, dims),
+        params.clone(),
+    ));
+    let pjrt = bench("lace-rl(pjrt-pallas)/decide", || {
+        black_box(lace_pjrt.decide(black_box(&ctx)));
+    });
+    let mut lace_jnp = LaceRlPolicy::new(PjrtQ::new(
+        QNetInfer::new(
+            runtime.load_hlo_text(art.infer_jnp_path(1).to_str().unwrap())?,
+            1,
+            dims,
+        ),
+        params.clone(),
+    ));
+    let jnp = bench("lace-rl(pjrt-jnp)/decide", || {
+        black_box(lace_jnp.decide(black_box(&ctx)));
+    });
+
+    // Batched PJRT inference amortization (256 states per dispatch).
+    let infer256 = QNetInfer::new(
+        runtime.load_hlo_text(art.infer_path(256).to_str().unwrap())?,
+        256,
+        dims,
+    );
+    let states: Vec<f32> = (0..256 * dims.0).map(|i| (i % 17) as f32 * 0.05).collect();
+    let b256 = bench("lace-rl(pjrt-pallas)/batch256", || {
+        black_box(infer256.q_values(&params, &states).unwrap());
+    });
+    println!(
+        "  -> batched PJRT per-state cost: {:.2}µs",
+        b256.median_ns / 256.0 / 1_000.0
+    );
+
+    // DPSO.
+    let mut dpso = Dpso::new(DpsoConfig::default());
+    let d = bench("dpso-ecolife/decide", || {
+        black_box(dpso.decide(black_box(&ctx)));
+    });
+
+    println!("\n== ratios ==");
+    println!("dpso / lace-rl(native):      {:.0}x", d.median_ns / native.median_ns);
+    println!("dpso / lace-rl(pjrt-pallas): {:.2}x", d.median_ns / pjrt.median_ns);
+    println!("pjrt-pallas / native:        {:.0}x (interpret-mode Pallas + dispatch overhead)",
+        pjrt.median_ns / native.median_ns);
+    println!("pjrt-jnp / native:           {:.0}x (dispatch overhead only)",
+        jnp.median_ns / native.median_ns);
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! End-to-end policy benchmark: wall-clock of the full Fig. 5 / Fig. 8
+//! evaluation runs (one per paper table), plus the online coordinator
+//! serving throughput. These are the end-to-end numbers EXPERIMENTS.md
+//! §Perf tracks across optimization iterations.
+
+use lace_rl::coordinator::driver::Pace;
+use lace_rl::coordinator::{CoordinatorServer, RouterConfig};
+use lace_rl::experiments::workload;
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::{CarbonMin, FixedTimeout, KeepAlivePolicy, LatencyMin};
+use lace_rl::util::bench::bench_once;
+
+fn main() -> anyhow::Result<()> {
+    let w = workload::build(7, true); // quick-scale workload for benching
+    println!(
+        "== e2e policy runs (General: {} invocations, Long-tailed: {}) ==\n",
+        w.general.len(),
+        w.long_tailed.len()
+    );
+
+    let mut run = |label: &str, policy: &mut dyn KeepAlivePolicy, long: bool| {
+        let trace = if long { &w.long_tailed } else { &w.general };
+        bench_once(label, 3, || {
+            workload::evaluate(trace, &w.ci, &w.energy, policy, 0.5, false);
+        });
+    };
+
+    // Fig. 5 rows (General workload).
+    run("fig5/latency-min", &mut LatencyMin, false);
+    run("fig5/carbon-min", &mut CarbonMin, false);
+    run("fig5/huawei-60s", &mut FixedTimeout::huawei(), false);
+    run("fig5/dpso-ecolife", &mut Dpso::new(DpsoConfig::default()), false);
+    let mut lace = workload::lace_rl_policy()?;
+    run("fig5/lace-rl", &mut lace, false);
+
+    // Fig. 8 rows (Long-tailed workload).
+    run("fig8/huawei-60s", &mut FixedTimeout::huawei(), true);
+    let mut lace = workload::lace_rl_policy()?;
+    run("fig8/lace-rl", &mut lace, true);
+
+    // Online coordinator serving throughput.
+    println!("\n== online coordinator (threaded driver -> router) ==\n");
+    let (report, _) = CoordinatorServer::run(
+        &w.general,
+        FixedTimeout::huawei(),
+        w.ci.clone(),
+        w.energy.clone(),
+        RouterConfig::default(),
+        Pace::MaxSpeed,
+        1024,
+    )?;
+    println!(
+        "serve/fixed-60s: {:.0} req/s over {} requests (decision mean {:.2}µs)",
+        report.throughput_rps, report.requests, report.mean_decision_us
+    );
+    let (report, _) = CoordinatorServer::run(
+        &w.general,
+        workload::lace_rl_policy()?,
+        w.ci.clone(),
+        w.energy.clone(),
+        RouterConfig::default(),
+        Pace::MaxSpeed,
+        1024,
+    )?;
+    println!(
+        "serve/lace-rl:   {:.0} req/s over {} requests (decision mean {:.2}µs)",
+        report.throughput_rps, report.requests, report.mean_decision_us
+    );
+    Ok(())
+}

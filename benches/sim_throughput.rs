@@ -1,0 +1,82 @@
+//! Simulator/coordinator hot-path throughput: invocations simulated per
+//! second per policy, plus microbenchmarks of the per-invocation pieces
+//! (state encode, reuse-window probs, CI integration).
+//!
+//! This is the L3 perf-pass measurement target (DESIGN.md §8): ≥1M
+//! simulated invocations/s with a trivial policy; the native-DQN run shows
+//! the policy overhead on top.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::experiments::workload;
+use lace_rl::policy::{CarbonMin, FixedTimeout, KeepAlivePolicy};
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::simulator::reuse::ReuseWindow;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::bench::{bench, bench_once, black_box};
+
+fn main() -> anyhow::Result<()> {
+    println!("== simulator throughput ==\n");
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 200,
+        duration_s: 7200.0,
+        target_invocations: 200_000,
+        seed: 7,
+        ..SynthConfig::default()
+    })
+    .generate();
+    let n = trace.len() as f64;
+    println!("workload: {} invocations\n", trace.len());
+    let ci = synth_region(Region::SolarHeavy, 1, 7);
+    let energy = EnergyModel::default();
+
+    let mut run_policy = |label: &str, policy: &mut dyn KeepAlivePolicy| {
+        let sim = Simulator::new(&trace, &ci, energy.clone(), SimConfig::default());
+        let s = bench_once(label, 5, || {
+            black_box(sim.run(policy).metrics.cold_starts);
+        });
+        println!(
+            "  -> {:.2}M invocations/s\n",
+            n / (s.median_ns / 1e9) / 1e6
+        );
+    };
+
+    run_policy("sim/fixed-60s (full run)", &mut FixedTimeout::huawei());
+    run_policy("sim/carbon-min (full run)", &mut CarbonMin);
+    let mut lace = workload::lace_rl_policy()?;
+    run_policy("sim/lace-rl-native (full run)", &mut lace);
+
+    println!("== per-invocation pieces ==\n");
+    // State encoding.
+    let prof = trace.functions[0].clone();
+    let ctx = lace_rl::policy::DecisionContext {
+        t: 100.0,
+        func: &prof,
+        ci: 400.0,
+        reuse_probs: [0.1, 0.3, 0.5, 0.7, 0.9],
+        lambda_carbon: 0.5,
+        idle_power_w: 1.2,
+        next_arrival_gap: None,
+    };
+    bench("encoder/encode", || {
+        black_box(lace_rl::rl::encoder::encode(black_box(&ctx)));
+    });
+
+    // Reuse-window probability evaluation (W=64, the hot default).
+    let mut w = ReuseWindow::new(64);
+    for i in 0..64 {
+        w.push((i as f64 * 1.7) % 90.0);
+    }
+    bench("reuse_window/probs(W=64)", || {
+        black_box(w.probs());
+    });
+
+    // CI integration across an hour boundary.
+    let ct = CarbonTrace::new("b", 3600.0, (0..48).map(|i| 300.0 + i as f64).collect());
+    bench("carbon/integrate(90min)", || {
+        black_box(ct.integrate(black_box(1800.0), black_box(7200.0)));
+    });
+
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Carbon-aware day: replay one day against three grid archetypes and show
+//! how LACE-RL shifts its keep-alive mix with the hourly carbon intensity
+//! (the Fig. 10b interpretability story as a runnable scenario).
+//!
+//! ```bash
+//! cargo run --release --example carbon_aware_day
+//! ```
+
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::experiments::workload;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::KEEP_ALIVE_ACTIONS;
+
+fn main() -> anyhow::Result<()> {
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 100,
+        duration_s: 86_400.0,
+        target_invocations: 150_000,
+        seed: 11,
+        ..SynthConfig::default()
+    })
+    .generate();
+    let energy = EnergyModel::default();
+    println!(
+        "one-day workload: {} invocations / {} functions\n",
+        trace.len(),
+        trace.functions.len()
+    );
+
+    for region in Region::ALL {
+        let ci = synth_region(region, 1, 11);
+        let mut lace = workload::lace_rl_policy()?.recording();
+        let m = workload::evaluate(&trace, &ci, &energy, &mut lace, 0.5, false);
+
+        // Hourly mix of short (1s) vs long (60s) keep-alives.
+        let mut per_hour = vec![[0u64; 5]; 24];
+        for d in &lace.decisions {
+            per_hour[((d.t / 3600.0) as usize) % 24][d.action] += 1;
+        }
+        println!("=== {} ===", region.name());
+        println!("{}", m.summary_row("lace-rl"));
+        println!("  hour  CI(g/kWh)  keep-alive mix (1s … 60s)");
+        for (hour, counts) in per_hour.iter().enumerate().step_by(3) {
+            let total: u64 = counts.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let bars: Vec<String> = (0..KEEP_ALIVE_ACTIONS.len())
+                .map(|a| format!("{:>4.0}%", 100.0 * counts[a] as f64 / total as f64))
+                .collect();
+            println!("  {hour:>4}  {:>9.0}  {}", ci.values[hour], bars.join(" "));
+        }
+        println!();
+    }
+    println!("expected shape: greener hours (low CI) → more long keep-alives;");
+    println!("dirty hours (high CI) → the mix shifts toward 1 s (paper Fig. 10b).");
+    Ok(())
+}

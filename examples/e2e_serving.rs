@@ -1,0 +1,166 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. Opens the AOT artifacts (L1 Pallas kernel + L2 jax graphs, lowered to
+//!    HLO text) and verifies the PJRT executables against the native path.
+//! 2. Trains the DQN **in Rust** for a few episodes by driving the AOT
+//!    `dqn_train_step` via PJRT, logging the loss curve.
+//! 3. Serves the held-out workload through the threaded online coordinator
+//!    (driver → router → policy) with the trained network, reporting
+//!    latency, throughput, and per-decision overhead (§IV-E).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+//! Recorded in EXPERIMENTS.md §End-to-end.
+
+use lace_rl::coordinator::driver::Pace;
+use lace_rl::coordinator::{CoordinatorServer, RouterConfig};
+use lace_rl::experiments::workload;
+use lace_rl::policy::lace_rl::{LaceRlPolicy, PjrtQ};
+use lace_rl::policy::native_mlp::NativeMlp;
+use lace_rl::policy::FixedTimeout;
+use lace_rl::rl::trainer::{train, TrainerConfig};
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, QNetInfer};
+use lace_rl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let seed = args.u64_or("seed", 7);
+    let episodes = args.usize_or("episodes", 8);
+    let quick = true; // e2e example always runs the CI-sized workload
+
+    // ---- Layer check: artifacts + PJRT vs native agreement ----
+    let artifacts = ArtifactSet::open(&artifacts::default_dir())?;
+    let runtime = PjrtRuntime::cpu()?;
+    println!(
+        "[1/3] artifacts: platform={} dims={:?}",
+        runtime.platform(),
+        artifacts.manifest.dims()
+    );
+    let params = artifacts.init_params()?;
+    let infer = QNetInfer::new(
+        runtime.load_hlo_text(artifacts.infer_path(1).to_str().unwrap())?,
+        1,
+        artifacts.manifest.dims(),
+    );
+    let state: Vec<f32> = (0..10).map(|i| 0.05 * i as f32).collect();
+    let q_pjrt = infer.q_values(&params, &state)?;
+    let q_native = NativeMlp::new(params.clone()).forward(&state).to_vec();
+    let diff = q_pjrt
+        .iter()
+        .zip(&q_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("      pallas-PJRT vs native max|Δq| = {diff:.2e}");
+    anyhow::ensure!(diff < 1e-4, "layer disagreement");
+
+    // ---- Train via the AOT train step ----
+    let w = workload::build(seed, quick);
+    println!(
+        "[2/3] training {} episodes on {} invocations (AOT train step via PJRT)…",
+        episodes,
+        w.train.len()
+    );
+    let t0 = std::time::Instant::now();
+    let report = train(
+        &artifacts,
+        &runtime,
+        &w.train,
+        &w.ci,
+        &w.energy,
+        &TrainerConfig {
+            episodes,
+            steps_per_episode: 400,
+            verbose: false,
+            seed,
+            ..TrainerConfig::default()
+        },
+    )?;
+    for e in report.episodes.iter().step_by(2.max(episodes / 4)) {
+        println!(
+            "      ep {:>2}  ε={:.2}  λ={:.1}  loss={:.5}  reward={:.1}",
+            e.episode, e.epsilon, e.lambda, e.mean_loss, e.episode_reward
+        );
+    }
+    println!(
+        "      {} gradient steps in {:.1}s",
+        report.total_steps,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- Serve the held-out workload online ----
+    println!("[3/3] serving the General test split through the coordinator…");
+    let policy = LaceRlPolicy::new(NativeMlp::new(report.params.clone()));
+    let (serve_report, _) = CoordinatorServer::run(
+        &w.general,
+        policy,
+        w.ci.clone(),
+        w.energy.clone(),
+        RouterConfig::default(),
+        Pace::MaxSpeed,
+        1024,
+    )?;
+    serve_report.print("lace-rl");
+
+    // Static baseline for contrast.
+    let (huawei_report, _) = CoordinatorServer::run(
+        &w.general,
+        FixedTimeout::huawei(),
+        w.ci.clone(),
+        w.energy.clone(),
+        RouterConfig::default(),
+        Pace::MaxSpeed,
+        1024,
+    )?;
+    huawei_report.print("huawei-60s");
+
+    // The canonical AOT decision path: serve a slice with the PJRT-backed
+    // Q-function (per-decision dispatch through XLA). PjRtClient is not
+    // Send (Rc internally), so this router runs synchronously on the main
+    // thread — same code path, no driver thread.
+    let slice: Vec<lace_rl::coordinator::InvocationRequest> = w
+        .general
+        .invocations
+        .iter()
+        .take(2_000)
+        .enumerate()
+        .map(|(id, inv)| lace_rl::coordinator::InvocationRequest {
+            id: id as u64,
+            t: inv.t,
+            func: inv.func,
+            exec_s: inv.exec_s,
+        })
+        .collect();
+    let pjrt_q = PjrtQ::new(
+        QNetInfer::new(
+            runtime.load_hlo_text(artifacts.infer_path(1).to_str().unwrap())?,
+            1,
+            artifacts.manifest.dims(),
+        ),
+        report.params.clone(),
+    );
+    let mut pjrt_router = lace_rl::coordinator::Router::new(
+        w.general.functions.clone(),
+        LaceRlPolicy::new(pjrt_q),
+        w.ci.clone(),
+        w.energy.clone(),
+        RouterConfig::default(),
+    );
+    for req in &slice {
+        pjrt_router.handle(req);
+    }
+    let pjrt_mean_us = pjrt_router.metrics.decision_ns.mean() / 1_000.0;
+    println!(
+        "[serve:lace-rl-pjrt] requests={} cold={} decision(mean)={:.1}µs (AOT Pallas path)",
+        pjrt_router.metrics.requests, pjrt_router.metrics.cold_starts, pjrt_mean_us
+    );
+
+    println!(
+        "\ne2e OK: cold starts {} (lace-rl) vs {} (huawei-60s); decision {:.1}µs native vs {:.1}µs pjrt",
+        serve_report.cold_starts,
+        huawei_report.cold_starts,
+        serve_report.mean_decision_us,
+        pjrt_mean_us
+    );
+    Ok(())
+}

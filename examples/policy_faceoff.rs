@@ -1,0 +1,49 @@
+//! Policy face-off: every keep-alive policy (plus the clairvoyant Oracle)
+//! on the General evaluation workload — the Fig. 5/7 comparison as a
+//! single runnable binary.
+//!
+//! ```bash
+//! cargo run --release --example policy_faceoff [-- --seed 7 --quick]
+//! ```
+
+use lace_rl::experiments::workload;
+use lace_rl::metrics::Comparison;
+use lace_rl::policy::dpso::DpsoConfig;
+use lace_rl::policy::{CarbonMin, Dpso, FixedTimeout, LatencyMin, Oracle};
+use lace_rl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let seed = args.u64_or("seed", 7);
+    let quick = args.flag("quick") || std::env::var("LACE_QUICK").is_ok();
+    let lambda = args.f64_or("lambda", 0.5);
+
+    let w = workload::build(seed, quick);
+    println!(
+        "General workload: {} invocations / {} functions  (λ_carbon = {lambda})",
+        w.general.len(),
+        w.general.functions.len()
+    );
+
+    let mut cmp = Comparison::new("faceoff");
+    let mut latency_min = LatencyMin;
+    cmp.add("latency-min", workload::evaluate(&w.general, &w.ci, &w.energy, &mut latency_min, lambda, false));
+    let mut carbon_min = CarbonMin;
+    cmp.add("carbon-min", workload::evaluate(&w.general, &w.ci, &w.energy, &mut carbon_min, lambda, false));
+    let mut huawei = FixedTimeout::huawei();
+    cmp.add("huawei-60s", workload::evaluate(&w.general, &w.ci, &w.energy, &mut huawei, lambda, false));
+    let mut dpso = Dpso::new(DpsoConfig::default());
+    cmp.add("dpso-ecolife", workload::evaluate(&w.general, &w.ci, &w.energy, &mut dpso, lambda, false));
+    let mut lace = workload::lace_rl_policy()?;
+    cmp.add("lace-rl", workload::evaluate(&w.general, &w.ci, &w.energy, &mut lace, lambda, false));
+    let mut oracle = Oracle;
+    cmp.add("oracle", workload::evaluate(&w.general, &w.ci, &w.energy, &mut oracle, lambda, true));
+
+    println!("\n{}", cmp.table());
+    println!("normalized trade-off (ideal = bottom-left, 1.00×/1.00×):");
+    for (name, cold, carbon) in cmp.tradeoff_coordinates() {
+        println!("  {name:<16} cold ×{cold:<8.2} keep-alive carbon ×{carbon:.2}");
+    }
+    println!("\nbest LCP: {:?}   best IRI: {:?}", cmp.best_lcp(), cmp.best_iri());
+    Ok(())
+}

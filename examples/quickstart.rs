@@ -1,0 +1,58 @@
+//! Quickstart: generate a small synthetic workload, run LACE-RL against
+//! Huawei's static 60 s keep-alive, and print the headline metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses trained weights when `artifacts/trained_weights.bin` exists (run
+//! `cargo run --release -- train` first for the full effect); falls back to
+//! the deterministic init weights otherwise.
+
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::experiments::workload;
+use lace_rl::policy::FixedTimeout;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small Huawei-like workload: 60 functions, 2 hours.
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 60,
+        duration_s: 7_200.0,
+        target_invocations: 50_000,
+        seed: 7,
+        ..SynthConfig::default()
+    })
+    .generate();
+    println!(
+        "workload: {} invocations / {} functions / {:.1}h",
+        trace.len(),
+        trace.functions.len(),
+        trace.duration_s() / 3600.0
+    );
+
+    // 2. A solar-heavy grid (duck-curve carbon intensity).
+    let ci = synth_region(Region::SolarHeavy, 1, 7);
+    let energy = EnergyModel::default();
+
+    // 3. Compare the learned policy against the static production default.
+    let mut lace = workload::lace_rl_policy()?;
+    let lace_m = workload::evaluate(&trace, &ci, &energy, &mut lace, 0.5, false);
+    let mut huawei = FixedTimeout::huawei();
+    let huawei_m = workload::evaluate(&trace, &ci, &energy, &mut huawei, 0.5, false);
+
+    println!("\n{}", huawei_m.summary_row("huawei-60s"));
+    println!("{}", lace_m.summary_row("lace-rl"));
+    println!(
+        "\nLACE-RL vs static: {:+.1}% cold starts, {:+.1}% keep-alive carbon, {:+.1}% LCP",
+        pct(lace_m.cold_starts as f64, huawei_m.cold_starts as f64),
+        pct(lace_m.keepalive_carbon_g, huawei_m.keepalive_carbon_g),
+        pct(lace_m.lcp(), huawei_m.lcp()),
+    );
+    Ok(())
+}
+
+fn pct(new: f64, old: f64) -> f64 {
+    100.0 * (new - old) / old.max(1e-12)
+}

@@ -1,0 +1,147 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for Rust/PJRT.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).  Emits:
+
+  artifacts/dqn_infer_b1.hlo.txt      Pallas fused-MLP inference, batch 1
+  artifacts/dqn_infer_b256.hlo.txt    Pallas fused-MLP inference, batch 256
+  artifacts/dqn_infer_jnp_b1.hlo.txt  pure-jnp inference (Pallas ablation)
+  artifacts/dqn_train_step.hlo.txt    full DQN + Adam train step, batch 64
+  artifacts/init_weights.bin          deterministic He-init parameters
+  artifacts/manifest.json             dims / action set / hyperparameters
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+WEIGHTS_MAGIC = b"LACEW001"
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via the stablehlo -> XlaComputation path."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs():
+    return [_spec(model.PARAM_SHAPES[k]) for k in model.PARAM_KEYS]
+
+
+def lower_infer(batch: int, use_pallas: bool = True) -> str:
+    fn = model.dqn_infer if use_pallas else model.dqn_infer_jnp
+    specs = _param_specs() + [_spec((batch, model.STATE_DIM))]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_train_step(batch: int) -> str:
+    specs = (
+        _param_specs() * 4                    # params, target, m, v
+        + [_spec(())]                         # step t
+        + [
+            _spec((batch, model.STATE_DIM)),  # states
+            _spec((batch,), jnp.int32),       # actions
+            _spec((batch,)),                  # rewards
+            _spec((batch, model.STATE_DIM)),  # next_states
+            _spec((batch,)),                  # dones
+        ]
+    )
+    return to_hlo_text(jax.jit(model.dqn_train_step).lower(*specs))
+
+
+def write_weights(path: str, params) -> None:
+    """Serialize a name->f32 tensor dict to the LACEW001 binary format.
+
+    Layout (little-endian):
+      magic[8] | u32 n | n x ( u32 name_len | name | u32 ndim | u32 dims[] |
+      f32 data[] )
+
+    Mirrored by rust/src/rl/weights.rs; change in lockstep.
+    """
+    import numpy as np
+
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(model.PARAM_KEYS)))
+        for name in model.PARAM_KEYS:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def build(outdir: str, seed: int = 0) -> None:
+    os.makedirs(outdir, exist_ok=True)
+
+    def emit(name: str, text: str) -> None:
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    print("[aot] lowering inference graphs (Pallas fused MLP)")
+    emit("dqn_infer_b1.hlo.txt", lower_infer(1, use_pallas=True))
+    emit("dqn_infer_b256.hlo.txt", lower_infer(256, use_pallas=True))
+    print("[aot] lowering pure-jnp inference ablation")
+    emit("dqn_infer_jnp_b1.hlo.txt", lower_infer(1, use_pallas=False))
+    print("[aot] lowering train step (jnp fwd + Pallas td_target)")
+    emit("dqn_train_step.hlo.txt", lower_train_step(model.TRAIN_BATCH))
+
+    print("[aot] writing deterministic init weights")
+    write_weights(os.path.join(outdir, "init_weights.bin"), model.init_params(seed))
+
+    manifest = {
+        "state_dim": model.STATE_DIM,
+        "hidden": [model.HIDDEN1, model.HIDDEN2],
+        "n_actions": model.N_ACTIONS,
+        "actions_sec": [1.0, 5.0, 10.0, 30.0, 60.0],
+        "train_batch": model.TRAIN_BATCH,
+        "gamma": model.GAMMA,
+        "lr": model.LR,
+        "adam": [model.ADAM_B1, model.ADAM_B2, model.ADAM_EPS],
+        "huber_delta": model.HUBER_DELTA,
+        "param_keys": list(model.PARAM_KEYS),
+        "infer_batches": [1, 256],
+        "seed": seed,
+    }
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused 3-layer MLP forward (the DQN Q-network).
+
+The paper's decision hot-spot is per-invocation Q-network inference
+(Sec. IV-E: ~15 us / invocation).  This kernel fuses the whole forward pass
+-- two hidden layers with ReLU plus the output head -- into a single Pallas
+call so that on a real TPU the weights (~47 KB fp32) are staged into VMEM
+once per grid step and every matmul feeds the MXU without round-tripping
+activations through HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid tiles the batch dimension (block = ``block_b`` rows); weights use a
+    constant index_map so every grid step sees the full parameter set
+    (one HBM->VMEM transfer amortized across the batch),
+  * each (block_b x h1) @ (h1 x h2) product is MXU-shaped; dims are chosen
+    as multiples of 8 lanes where the model allows,
+  * VMEM footprint per step is ~0.3 MB << 16 MB, leaving room for
+    double-buffering of the batch blocks.
+
+``interpret=True`` is mandatory in this environment: real-TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute.  Correctness is
+asserted against ``ref.mlp_forward`` in python/tests/.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    """Fused forward for one batch block.
+
+    All refs live in VMEM for the duration of the grid step.  The whole
+    chain is computed without writing intermediates back to HBM.
+    """
+    x = x_ref[...]
+    h = jnp.maximum(x @ w1_ref[...] + b1_ref[...], 0.0)
+    h = jnp.maximum(h @ w2_ref[...] + b2_ref[...], 0.0)
+    o_ref[...] = h @ w3_ref[...] + b3_ref[...]
+
+
+def fused_mlp(x, w1, b1, w2, b2, w3, b3, *, block_b: int | None = None):
+    """Fused 3-layer MLP forward as a single Pallas call.
+
+    Args:
+      x: f32[B, d_in] batch of encoded states.
+      w1..b3: MLP parameters (see ref.mlp_forward for shapes).
+      block_b: batch tile size; must divide B.  Defaults to min(B, 128) --
+        128 rows matches the MXU systolic height.
+
+    Returns:
+      f32[B, d_out] Q-values.
+    """
+    batch, d_in = x.shape
+    h1 = w1.shape[1]
+    h2 = w2.shape[1]
+    d_out = w3.shape[1]
+    if block_b is None:
+        block_b = min(batch, 128)
+    if batch % block_b != 0:
+        raise ValueError(f"block_b={block_b} must divide batch={batch}")
+    grid = (batch // block_b,)
+
+    # Weights: constant index_map -> full tensor resident every grid step.
+    def whole(*shape):
+        ndim = len(shape)
+        return pl.BlockSpec(shape, lambda i, _n=ndim: (0,) * _n)
+
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            whole(d_in, h1),
+            whole(h1),
+            whole(h1, h2),
+            whole(h2),
+            whole(h2, d_out),
+            whole(d_out),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), x.dtype),
+        interpret=True,  # CPU-PJRT requirement; see module docstring.
+    )(x, w1, b1, w2, b2, w3, b3)
+
+
+def fused_mlp_params(x, params, *, block_b: int | None = None):
+    """Convenience wrapper taking the params dict used by L2/model.py."""
+    return fused_mlp(
+        x,
+        params["w1"],
+        params["b1"],
+        params["w2"],
+        params["b2"],
+        params["w3"],
+        params["b3"],
+        block_b=block_b,
+    )

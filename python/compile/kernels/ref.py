@@ -1,0 +1,43 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations the Pallas kernels in
+``fused_mlp.py`` and ``td_target.py`` are validated against (pytest +
+hypothesis in ``python/tests/``).  They are also used directly inside the
+differentiable branch of the DQN train step (L2), where autodiff must flow
+through the forward pass.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlp_forward(x, params):
+    """3-layer MLP forward: Q(s) for a batch of states.
+
+    Args:
+      x: f32[B, d_in] batch of encoded states.
+      params: dict with keys w1 [d_in,h1], b1 [h1], w2 [h1,h2], b2 [h2],
+        w3 [h2,d_out], b3 [d_out].
+
+    Returns:
+      f32[B, d_out] Q-values, one column per keep-alive action.
+    """
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)
+    h = jnp.maximum(h @ params["w2"] + params["b2"], 0.0)
+    return h @ params["w3"] + params["b3"]
+
+
+def td_target(q_next, rewards, dones, gamma):
+    """Bellman target: r + gamma * (1 - done) * max_a' Q'(s', a').
+
+    Args:
+      q_next: f32[B, A] target-network Q-values at next states.
+      rewards: f32[B].
+      dones: f32[B] in {0, 1}; 1 marks an episode-terminal transition.
+      gamma: python float discount factor.
+
+    Returns:
+      f32[B] TD targets.
+    """
+    return rewards + gamma * (1.0 - dones) * jnp.max(q_next, axis=-1)

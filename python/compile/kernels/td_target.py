@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: Bellman target computation for the DQN train step.
+
+target[b] = r[b] + gamma * (1 - done[b]) * max_a' Q'(s'[b], a')
+
+This lives on the *non-differentiated* branch of the train step (targets are
+constants w.r.t. the online parameters), so a Pallas kernel is safe inside
+the jax.grad'd loss: autodiff never has to traverse the pallas_call.
+
+The reduction over the action axis is a lane-wise max on TPU (d_out = 5
+actions pads to one 8-lane vector register); the kernel is purely
+element-wise + reduce, VPU work with no MXU involvement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _td_kernel(qn_ref, r_ref, done_ref, o_ref, *, gamma: float):
+    qn = qn_ref[...]          # [block_b, A]
+    r = r_ref[...]            # [block_b]
+    done = done_ref[...]      # [block_b]
+    o_ref[...] = r + gamma * (1.0 - done) * jnp.max(qn, axis=-1)
+
+
+def td_target(q_next, rewards, dones, *, gamma: float, block_b: int | None = None):
+    """Bellman targets as a Pallas call.
+
+    Args:
+      q_next: f32[B, A] target-network Q-values at next states.
+      rewards: f32[B].
+      dones: f32[B] in {0, 1}.
+      gamma: discount factor (baked into the kernel as a compile-time const).
+      block_b: batch tile; must divide B.  Defaults to B (single grid step --
+        the tensor is tiny).
+
+    Returns:
+      f32[B] TD targets.
+    """
+    batch, n_actions = q_next.shape
+    if block_b is None:
+        block_b = batch
+    if batch % block_b != 0:
+        raise ValueError(f"block_b={block_b} must divide batch={batch}")
+    grid = (batch // block_b,)
+
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_td_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n_actions), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), q_next.dtype),
+        interpret=True,  # CPU-PJRT requirement.
+    )(q_next, rewards, dones)

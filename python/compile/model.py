@@ -1,0 +1,199 @@
+"""L2: the LACE-RL DQN compute graph (forward + full train step) in JAX.
+
+The paper (Sec. III-C) uses a lightweight fully-connected Q-network:
+  input  : 10-dim state  [p_k1..p_k5, mem, cpu, L_cold, CI_t, lambda_carbon]
+  hidden : 64 -> 64, ReLU
+  output : 5 Q-values, one per keep-alive action {1, 5, 10, 30, 60} s
+
+Everything here is build-time Python: ``aot.py`` lowers these functions once
+to HLO text and the Rust coordinator (L3) drives the compiled executables via
+PJRT.  Python never runs on the decision path.
+
+Design split between the two L1 Pallas kernels:
+  * inference graphs call the fused_mlp Pallas kernel (the hot path),
+  * the train step computes the *online* forward with the pure-jnp reference
+    (autodiff must flow through it) and the Bellman *targets* with the
+    td_target Pallas kernel on the stop-gradient branch, where autodiff never
+    looks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_mlp as fused_mlp_k
+from compile.kernels import ref
+from compile.kernels import td_target as td_target_k
+
+# ---------------------------------------------------------------------------
+# Architecture constants — mirrored in rust/src/rl/qnet.rs and the artifact
+# manifest; change in lockstep.
+# ---------------------------------------------------------------------------
+STATE_DIM = 10
+HIDDEN1 = 64
+HIDDEN2 = 64
+N_ACTIONS = 5          # keep-alive set {1, 5, 10, 30, 60} s
+TRAIN_BATCH = 64       # paper Sec. IV-A4
+GAMMA = 0.99           # paper Sec. IV-A4
+LR = 1e-3              # paper Sec. IV-A4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+HUBER_DELTA = 1.0      # Huber TD loss for stability (standard DQN practice)
+
+PARAM_KEYS = ("w1", "b1", "w2", "b2", "w3", "b3")
+PARAM_SHAPES = {
+    "w1": (STATE_DIM, HIDDEN1),
+    "b1": (HIDDEN1,),
+    "w2": (HIDDEN1, HIDDEN2),
+    "b2": (HIDDEN2,),
+    "w3": (HIDDEN2, N_ACTIONS),
+    "b3": (N_ACTIONS,),
+}
+
+
+def init_params(seed: int = 0):
+    """He-uniform initialization, deterministic in the seed.
+
+    Runs once at artifact-build time; the resulting tensors are written to
+    ``artifacts/init_weights.bin`` for the Rust trainer to load.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name in ("w1", "w2", "w3"):
+        key, sub = jax.random.split(key)
+        shape = PARAM_SHAPES[name]
+        fan_in = shape[0]
+        bound = (6.0 / fan_in) ** 0.5
+        params[name] = jax.random.uniform(
+            sub, shape, jnp.float32, minval=-bound, maxval=bound
+        )
+    for name in ("b1", "b2", "b3"):
+        params[name] = jnp.zeros(PARAM_SHAPES[name], jnp.float32)
+    return params
+
+
+def _params_from_flat(flat):
+    return dict(zip(PARAM_KEYS, flat))
+
+
+def _flat_from_params(params):
+    return tuple(params[k] for k in PARAM_KEYS)
+
+
+# ---------------------------------------------------------------------------
+# Inference graphs (AOT-lowered per batch size)
+# ---------------------------------------------------------------------------
+
+
+def dqn_infer(w1, b1, w2, b2, w3, b3, states):
+    """Q-values for a batch of states via the fused Pallas MLP kernel.
+
+    Returns a 1-tuple (rust unwraps with to_tuple1).
+    """
+    q = fused_mlp_k.fused_mlp(states, w1, b1, w2, b2, w3, b3)
+    return (q,)
+
+
+def dqn_infer_jnp(w1, b1, w2, b2, w3, b3, states):
+    """Pure-jnp inference graph — the no-Pallas ablation artifact.
+
+    Used by the perf pass to separate interpret-mode Pallas overhead from
+    PJRT dispatch overhead (EXPERIMENTS.md §Perf).
+    """
+    q = ref.mlp_forward(states, _params_from_flat((w1, b1, w2, b2, w3, b3)))
+    return (q,)
+
+
+# ---------------------------------------------------------------------------
+# Train step (AOT-lowered once at TRAIN_BATCH)
+# ---------------------------------------------------------------------------
+
+
+def _huber(err):
+    """Element-wise Huber loss on TD error."""
+    abs_err = jnp.abs(err)
+    quad = jnp.minimum(abs_err, HUBER_DELTA)
+    return 0.5 * quad * quad + HUBER_DELTA * (abs_err - quad)
+
+
+def dqn_train_step(*args):
+    """One DQN + Adam step as a pure function.
+
+    Flat signature (AOT interchange; all f32 unless noted):
+      args[0:6]    online params   (w1, b1, w2, b2, w3, b3)
+      args[6:12]   target params   (same order)
+      args[12:18]  Adam first moments m
+      args[18:24]  Adam second moments v
+      args[24]     step counter t (scalar f32; 1-based for bias correction)
+      args[25]     states      [B, STATE_DIM]
+      args[26]     actions     [B] i32 indices into the keep-alive set
+      args[27]     rewards     [B]
+      args[28]     next_states [B, STATE_DIM]
+      args[29]     dones       [B] in {0, 1}
+
+    Returns (tuple of 19):
+      new params (6), new m (6), new v (6), loss scalar.
+    """
+    params = _params_from_flat(args[0:6])
+    target_params = _params_from_flat(args[6:12])
+    m = _params_from_flat(args[12:18])
+    v = _params_from_flat(args[18:24])
+    t = args[24]
+    states, actions, rewards, next_states, dones = args[25:30]
+
+    # --- Bellman targets: target net forward + Pallas td_target kernel.
+    # Entirely constant w.r.t. `params`; wrapped in stop_gradient for clarity.
+    q_next = ref.mlp_forward(next_states, target_params)
+    targets = td_target_k.td_target(q_next, rewards, dones, gamma=GAMMA)
+    targets = jax.lax.stop_gradient(targets)
+
+    def loss_fn(p):
+        q = ref.mlp_forward(states, p)  # differentiable branch: pure jnp
+        batch = q.shape[0]
+        q_sel = q[jnp.arange(batch), actions]
+        return jnp.mean(_huber(q_sel - targets))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+
+    # --- Adam update with bias correction.
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_params, new_m, new_v = {}, {}, {}
+    for k in PARAM_KEYS:
+        g = grads[k]
+        new_m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        new_v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        m_hat = new_m[k] / bc1
+        v_hat = new_v[k] / bc2
+        new_params[k] = params[k] - LR * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+
+    return (
+        *_flat_from_params(new_params),
+        *_flat_from_params(new_m),
+        *_flat_from_params(new_v),
+        loss,
+    )
+
+
+def train_step_reference(params, target_params, m, v, t, batch):
+    """Dict-based wrapper used by the python-side tests."""
+    out = dqn_train_step(
+        *_flat_from_params(params),
+        *_flat_from_params(target_params),
+        *_flat_from_params(m),
+        *_flat_from_params(v),
+        jnp.float32(t),
+        batch["states"],
+        batch["actions"],
+        batch["rewards"],
+        batch["next_states"],
+        batch["dones"],
+    )
+    return (
+        _params_from_flat(out[0:6]),
+        _params_from_flat(out[6:12]),
+        _params_from_flat(out[12:18]),
+        out[18],
+    )

@@ -1,0 +1,124 @@
+//! Carbon-intensity time series with step-wise (hourly) evaluation.
+
+/// A carbon-intensity trace: values in gCO₂eq/kWh sampled every `step_s`
+/// seconds starting at t=0. Lookups beyond the end wrap around (diurnal
+/// profiles repeat), matching the paper's hourly sampling (§IV-A3).
+#[derive(Debug, Clone)]
+pub struct CarbonTrace {
+    pub step_s: f64,
+    pub values: Vec<f64>,
+    pub region: String,
+}
+
+impl CarbonTrace {
+    pub fn new(region: &str, step_s: f64, values: Vec<f64>) -> Self {
+        assert!(step_s > 0.0 && !values.is_empty());
+        CarbonTrace { step_s, values, region: region.to_string() }
+    }
+
+    /// Constant CI — the ablation baseline (no temporal signal).
+    pub fn constant(ci: f64) -> Self {
+        CarbonTrace::new("constant", 3600.0, vec![ci])
+    }
+
+    /// CI at time `t` (seconds from trace start). Piecewise constant per
+    /// step; wraps past the end.
+    #[inline]
+    pub fn at(&self, t: f64) -> f64 {
+        let idx = (t / self.step_s).floor() as i64;
+        let n = self.values.len() as i64;
+        let idx = ((idx % n) + n) % n; // euclidean wrap (handles t<0 too)
+        self.values[idx as usize]
+    }
+
+    /// Integral of CI over [t0, t1] in (gCO₂eq/kWh)·s — used to carbon-weight
+    /// idle energy that spans step boundaries.
+    pub fn integrate(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let step_end = ((t / self.step_s).floor() + 1.0) * self.step_s;
+            let seg_end = step_end.min(t1);
+            acc += self.at(t) * (seg_end - t);
+            t = seg_end;
+        }
+        acc
+    }
+
+    /// Mean CI over [t0, t1].
+    pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return self.at(t0);
+        }
+        self.integrate(t0, t1) / (t1 - t0)
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.step_s * self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_step() -> CarbonTrace {
+        CarbonTrace::new("t", 10.0, vec![100.0, 300.0])
+    }
+
+    #[test]
+    fn piecewise_constant_lookup() {
+        let c = two_step();
+        assert_eq!(c.at(0.0), 100.0);
+        assert_eq!(c.at(9.999), 100.0);
+        assert_eq!(c.at(10.0), 300.0);
+    }
+
+    #[test]
+    fn wraps_around() {
+        let c = two_step();
+        assert_eq!(c.at(20.0), 100.0);
+        assert_eq!(c.at(35.0), 300.0);
+        assert_eq!(c.at(-5.0), 300.0); // euclidean wrap
+    }
+
+    #[test]
+    fn integrate_across_boundary() {
+        let c = two_step();
+        // [5, 15]: 5s at 100 + 5s at 300 = 2000
+        assert!((c.integrate(5.0, 15.0) - 2000.0).abs() < 1e-9);
+        assert_eq!(c.integrate(5.0, 5.0), 0.0);
+        assert!((c.mean_over(5.0, 15.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integrate_matches_at_within_step() {
+        let c = two_step();
+        assert!((c.integrate(2.0, 4.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_trace() {
+        let c = CarbonTrace::constant(250.0);
+        assert_eq!(c.at(123456.0), 250.0);
+        assert!((c.mean_over(0.0, 1e6) - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_max() {
+        let c = two_step();
+        assert_eq!(c.min(), 100.0);
+        assert_eq!(c.max(), 300.0);
+    }
+}

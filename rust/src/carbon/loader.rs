@@ -1,0 +1,86 @@
+//! Electricity Maps CSV loader.
+//!
+//! Accepts the hourly export format: a `carbon_intensity` column (gCO₂/kWh),
+//! rows in chronological order, one per hour. Extra columns are ignored.
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::util::csv::Table;
+
+/// Load an hourly CI trace from CSV. `region` labels the result.
+pub fn load_csv(path: &str, region: &str) -> anyhow::Result<CarbonTrace> {
+    let table = Table::load(path)?;
+    from_table(&table, region)
+}
+
+pub fn from_table(table: &Table, region: &str) -> anyhow::Result<CarbonTrace> {
+    let col = table
+        .col("carbon_intensity")
+        .ok_or_else(|| anyhow::anyhow!("missing column 'carbon_intensity'"))?;
+    let mut values = Vec::with_capacity(table.rows.len());
+    for (ri, row) in table.rows.iter().enumerate() {
+        let v: f64 = row
+            .get(col)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("row {}: bad carbon_intensity", ri + 2))?;
+        anyhow::ensure!(v >= 0.0, "row {}: negative carbon intensity", ri + 2);
+        values.push(v);
+    }
+    anyhow::ensure!(!values.is_empty(), "empty carbon trace");
+    Ok(CarbonTrace::new(region, 3600.0, values))
+}
+
+/// Save a trace back to the same schema.
+pub fn save_csv(trace: &CarbonTrace, path: &str) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = crate::util::csv::Writer::new(
+        std::io::BufWriter::new(f),
+        &["hour", "carbon_intensity"],
+    )?;
+    for (i, v) in trace.values.iter().enumerate() {
+        w.row(&[format!("{i}"), format!("{v:.3}")])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_hourly_values() {
+        let t = Table::read(Cursor::new(
+            "hour,carbon_intensity\n0,120.5\n1,130.0\n2,90.25\n",
+        ))
+        .unwrap();
+        let c = from_table(&t, "test").unwrap();
+        assert_eq!(c.values, vec![120.5, 130.0, 90.25]);
+        assert_eq!(c.at(3700.0), 130.0);
+    }
+
+    #[test]
+    fn rejects_negative_and_missing() {
+        let t = Table::read(Cursor::new("carbon_intensity\n-1\n")).unwrap();
+        assert!(from_table(&t, "x").is_err());
+        let t = Table::read(Cursor::new("other\n1\n")).unwrap();
+        assert!(from_table(&t, "x").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = crate::carbon::synth::synth_region(
+            crate::carbon::synth::Region::SolarHeavy,
+            1,
+            4,
+        );
+        let path = std::env::temp_dir().join("lace_rl_ci_roundtrip.csv");
+        let path = path.to_str().unwrap();
+        save_csv(&c, path).unwrap();
+        let loaded = load_csv(path, "rt").unwrap();
+        assert_eq!(loaded.values.len(), c.values.len());
+        for (a, b) in c.values.iter().zip(loaded.values.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+}

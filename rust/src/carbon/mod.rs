@@ -1,0 +1,14 @@
+//! Grid carbon-intensity substrate (Electricity Maps substitute).
+//!
+//! The paper consumes hourly carbon-intensity (CI) traces in gCO₂eq/kWh and
+//! assumes CI is constant within an hour (§II-B). [`synth`] generates the
+//! three anonymized region archetypes of Fig. 3a (solar duck-curve,
+//! fossil-heavy flat, hydro-dominated low); [`loader`] reads real
+//! Electricity Maps CSV exports.
+
+pub mod intensity;
+pub mod loader;
+pub mod synth;
+
+pub use intensity::CarbonTrace;
+pub use synth::{synth_region, Region};

@@ -1,0 +1,120 @@
+//! Workload driver (paper §III-A component 1): streams trace invocations
+//! into the router's request channel.
+//!
+//! Supports max-speed replay (throughput measurement) and paced replay at a
+//! configurable time acceleration (latency realism). Runs on its own
+//! thread; the channel provides natural backpressure.
+
+use std::sync::mpsc::SyncSender;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::InvocationRequest;
+use crate::trace::model::Trace;
+
+/// Replay pacing.
+#[derive(Debug, Clone, Copy)]
+pub enum Pace {
+    /// Send as fast as the channel accepts.
+    MaxSpeed,
+    /// Replay virtual time scaled by `speedup` (e.g. 60 = 1 min/s).
+    RealTime { speedup: f64 },
+}
+
+/// Stream `trace` into `tx` on a new thread. Returns the join handle; the
+/// channel is closed when the trace ends.
+pub fn spawn_driver(
+    trace: &Trace,
+    pace: Pace,
+    tx: SyncSender<InvocationRequest>,
+) -> JoinHandle<u64> {
+    let invocations: Vec<(f64, u32, f64)> = trace
+        .invocations
+        .iter()
+        .map(|i| (i.t, i.func, i.exec_s))
+        .collect();
+    std::thread::spawn(move || {
+        let start = Instant::now();
+        let t0 = invocations.first().map(|x| x.0).unwrap_or(0.0);
+        let mut sent = 0u64;
+        for (id, (t, func, exec_s)) in invocations.into_iter().enumerate() {
+            if let Pace::RealTime { speedup } = pace {
+                let target = Duration::from_secs_f64(((t - t0) / speedup).max(0.0));
+                let elapsed = start.elapsed();
+                if target > elapsed {
+                    std::thread::sleep(target - elapsed);
+                }
+            }
+            if tx
+                .send(InvocationRequest { id: id as u64, t, func, exec_s })
+                .is_err()
+            {
+                break; // router gone
+            }
+            sent += 1;
+        }
+        sent
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::model::{FunctionProfile, Invocation, Runtime, TriggerType};
+    use std::sync::mpsc::sync_channel;
+
+    fn trace(n: usize) -> Trace {
+        Trace {
+            functions: vec![FunctionProfile {
+                id: 0,
+                runtime: Runtime::Python,
+                trigger: TriggerType::Http,
+                mem_mb: 64.0,
+                cpu_cores: 1.0,
+                cold_start_s: 0.1,
+                mean_exec_s: 0.1,
+            }],
+            invocations: (0..n)
+                .map(|i| Invocation { t: i as f64 * 0.1, func: 0, exec_s: 0.01 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn max_speed_delivers_all_in_order() {
+        let t = trace(100);
+        let (tx, rx) = sync_channel(8);
+        let h = spawn_driver(&t, Pace::MaxSpeed, tx);
+        let got: Vec<InvocationRequest> = rx.iter().collect();
+        assert_eq!(h.join().unwrap(), 100);
+        assert_eq!(got.len(), 100);
+        assert!(got.windows(2).all(|w| w[0].t <= w[1].t));
+        assert_eq!(got[0].id, 0);
+        assert_eq!(got[99].id, 99);
+    }
+
+    #[test]
+    fn stops_when_receiver_dropped() {
+        let t = trace(10_000);
+        let (tx, rx) = sync_channel(1);
+        let h = spawn_driver(&t, Pace::MaxSpeed, tx);
+        // Take 5 then hang up.
+        let taken: Vec<_> = rx.iter().take(5).collect();
+        drop(rx);
+        assert_eq!(taken.len(), 5);
+        let sent = h.join().unwrap();
+        assert!(sent < 10_000);
+    }
+
+    #[test]
+    fn paced_replay_respects_time() {
+        let t = trace(5); // spans 0.4 virtual seconds
+        let (tx, rx) = sync_channel(16);
+        let start = Instant::now();
+        let h = spawn_driver(&t, Pace::RealTime { speedup: 4.0 }, tx);
+        let _: Vec<_> = rx.iter().collect();
+        h.join().unwrap();
+        // 0.4s / 4x = 0.1s minimum wall time.
+        assert!(start.elapsed() >= Duration::from_millis(90));
+    }
+}

@@ -1,0 +1,189 @@
+//! Online pod lifecycle manager: the router's warm-pool state.
+//!
+//! The same semantics as the simulator's pools (MRU selection, lazy
+//! expiry) but organized for incremental online use with out-of-order
+//! queries per function.
+
+use crate::simulator::pod::Pod;
+
+/// Result of a pool query for an arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartKind {
+    Warm,
+    Cold,
+}
+
+/// Per-function warm pools with lazy expiry.
+#[derive(Debug, Default)]
+pub struct PodManager {
+    pools: Vec<Vec<Pod>>,
+    /// Pods expired since the last drain (idle_start, warm_until, func).
+    expired: Vec<(u32, f64, f64)>,
+}
+
+impl PodManager {
+    pub fn new(n_functions: usize) -> Self {
+        PodManager { pools: vec![Vec::new(); n_functions], expired: Vec::new() }
+    }
+
+    fn ensure(&mut self, func: u32) {
+        let need = func as usize + 1;
+        if self.pools.len() < need {
+            self.pools.resize_with(need, Vec::new);
+        }
+    }
+
+    /// Serve an arrival at time `t`: returns Warm (and closes that pod's
+    /// idle period, reported via `on_idle_span`) or Cold (allocating a new
+    /// pod busy until `completion`). Expired pods are collected for the
+    /// caller to account (`drain_expired`).
+    pub fn acquire(
+        &mut self,
+        func: u32,
+        t: f64,
+        completion: f64,
+        mut on_idle_span: impl FnMut(f64, f64),
+    ) -> (StartKind, usize) {
+        self.ensure(func);
+        let pool = &mut self.pools[func as usize];
+
+        // Lazy expiry.
+        let mut i = 0;
+        while i < pool.len() {
+            if pool[i].expired(t) {
+                let pod = pool.swap_remove(i);
+                self.expired.push((func, pod.idle_start, pod.warm_until));
+            } else {
+                i += 1;
+            }
+        }
+
+        // MRU warm pod.
+        let mut chosen: Option<usize> = None;
+        let mut best = f64::NEG_INFINITY;
+        for (pi, pod) in pool.iter().enumerate() {
+            if pod.available(t) && pod.idle_start > best {
+                best = pod.idle_start;
+                chosen = Some(pi);
+            }
+        }
+
+        match chosen {
+            Some(pi) => {
+                let pod = &mut pool[pi];
+                on_idle_span(pod.idle_start, t);
+                pod.busy_until = completion;
+                pod.pending = None;
+                (StartKind::Warm, pi)
+            }
+            None => {
+                pool.push(Pod::new_busy(completion));
+                (StartKind::Cold, pool.len() - 1)
+            }
+        }
+    }
+
+    /// Apply a keep-alive decision for a pod completing at `completion`.
+    /// With `refresh = false` (static policies), the window armed at the
+    /// pod's first idle period is left untouched on reuse.
+    pub fn retain(&mut self, func: u32, pod_idx: usize, completion: f64, keepalive_s: f64) {
+        self.retain_with(func, pod_idx, completion, keepalive_s, true)
+    }
+
+    pub fn retain_with(
+        &mut self,
+        func: u32,
+        pod_idx: usize,
+        completion: f64,
+        keepalive_s: f64,
+        refresh: bool,
+    ) {
+        let pod = &mut self.pools[func as usize][pod_idx];
+        pod.busy_until = completion;
+        pod.idle_start = completion;
+        if refresh || pod.warm_until == f64::INFINITY {
+            pod.warm_until = completion + keepalive_s;
+        }
+    }
+
+    /// Take the idle spans of pods that expired since the last call:
+    /// `(func, idle_start, warm_until)`.
+    pub fn drain_expired(&mut self) -> Vec<(u32, f64, f64)> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Warm pod count for a function (diagnostics).
+    pub fn warm_count(&self, func: u32, t: f64) -> usize {
+        self.pools
+            .get(func as usize)
+            .map(|p| p.iter().filter(|pod| pod.available(t)).count())
+            .unwrap_or(0)
+    }
+
+    /// Total live pods (busy + warm) across all functions.
+    pub fn total_pods(&self) -> usize {
+        self.pools.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_then_warm_then_expire() {
+        let mut pm = PodManager::new(1);
+        // Cold at t=0, completes at 1.
+        let (k, pi) = pm.acquire(0, 0.0, 1.0, |_, _| {});
+        assert_eq!(k, StartKind::Cold);
+        pm.retain(0, pi, 1.0, 10.0);
+        assert_eq!(pm.warm_count(0, 5.0), 1);
+
+        // Warm reuse at t=5 closes idle span [1, 5].
+        let mut spans = Vec::new();
+        let (k, pi) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
+        assert_eq!(k, StartKind::Warm);
+        assert_eq!(spans, vec![(1.0, 5.0)]);
+        pm.retain(0, pi, 6.0, 10.0);
+
+        // t=100: expired, so cold again; expiry drained.
+        let (k, _) = pm.acquire(0, 100.0, 101.0, |_, _| {});
+        assert_eq!(k, StartKind::Cold);
+        let ex = pm.drain_expired();
+        assert_eq!(ex, vec![(0, 6.0, 16.0)]);
+    }
+
+    #[test]
+    fn busy_pod_not_reusable() {
+        let mut pm = PodManager::new(1);
+        let (_, pi) = pm.acquire(0, 0.0, 10.0, |_, _| {});
+        pm.retain(0, pi, 10.0, 60.0);
+        // Arrival at t=5 while pod is busy until 10 -> cold.
+        let (k, _) = pm.acquire(0, 5.0, 6.0, |_, _| {});
+        assert_eq!(k, StartKind::Cold);
+        assert_eq!(pm.total_pods(), 2);
+    }
+
+    #[test]
+    fn mru_selection() {
+        let mut pm = PodManager::new(1);
+        let (_, p0) = pm.acquire(0, 0.0, 0.5, |_, _| {});
+        pm.retain(0, p0, 0.5, 60.0);
+        let (k1, p1) = pm.acquire(0, 0.2, 0.7, |_, _| {}); // overlaps -> cold
+        assert_eq!(k1, StartKind::Cold);
+        pm.retain(0, p1, 0.7, 60.0);
+        // Next arrival should pick the more recently idle pod (idle 0.7).
+        let mut spans = Vec::new();
+        let (k2, _) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
+        assert_eq!(k2, StartKind::Warm);
+        assert_eq!(spans, vec![(0.7, 5.0)]);
+    }
+
+    #[test]
+    fn grows_for_new_functions() {
+        let mut pm = PodManager::new(1);
+        let (k, _) = pm.acquire(7, 0.0, 1.0, |_, _| {});
+        assert_eq!(k, StartKind::Cold);
+        assert_eq!(pm.warm_count(7, 0.0), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Online coordinator: the deployable control plane (paper §III-A,
+//! component 4 "Real System").
+//!
+//! Architecture mirrors a FaaS platform's keep-alive controller sitting
+//! *beneath* cluster autoscaling: a workload [`driver`] streams invocation
+//! requests over a channel into the [`router`], which owns the per-function
+//! warm pools, consults the keep-alive policy at each completion, and
+//! answers with the latency outcome. Decision-making is asynchronous to the
+//! response path, matching the paper's observation that control-plane
+//! enforcement (CRD updates) is off the function's critical path.
+//!
+//! tokio is unavailable in this environment's offline crate set, so the
+//! event loop is `std::thread` + `mpsc` — same topology, no async runtime
+//! (DESIGN.md §3).
+
+pub mod driver;
+pub mod lifecycle;
+pub mod router;
+pub mod server;
+
+pub use router::{InvocationRequest, InvocationResponse, Router, RouterConfig};
+pub use server::{CoordinatorServer, ServeReport};

@@ -1,0 +1,280 @@
+//! The router: online request handling + keep-alive control.
+//!
+//! Receives [`InvocationRequest`]s (from the driver or any producer),
+//! resolves warm/cold against the [`PodManager`], answers with the latency
+//! outcome, and applies the policy's keep-alive decision. Timing of the
+//! *decision* itself is measured per request — the paper's §IV-E inference
+//! overhead, observed in situ.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::energy::model::EnergyModel;
+use crate::coordinator::lifecycle::{PodManager, StartKind};
+use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::simulator::reuse::ReuseWindow;
+use crate::trace::model::FunctionProfile;
+use crate::util::stats::Running;
+
+/// One invocation submitted to the control plane. `t` is virtual workload
+/// time (seconds); the router is clock-agnostic so drivers can replay
+/// traces at any acceleration.
+#[derive(Debug, Clone)]
+pub struct InvocationRequest {
+    pub id: u64,
+    pub t: f64,
+    pub func: u32,
+    pub exec_s: f64,
+}
+
+/// The router's answer.
+#[derive(Debug, Clone)]
+pub struct InvocationResponse {
+    pub id: u64,
+    pub cold: bool,
+    /// End-to-end latency (cold + exec + network), virtual seconds.
+    pub latency_s: f64,
+    /// Keep-alive chosen for the pod (seconds).
+    pub keepalive_s: f64,
+    /// Wall-clock cost of the policy decision (ns) — §IV-E.
+    pub decision_ns: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub lambda_carbon: f64,
+    pub network_latency_s: f64,
+    pub reuse_window: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            lambda_carbon: 0.5,
+            network_latency_s: crate::NETWORK_LATENCY_S,
+            reuse_window: crate::simulator::reuse::DEFAULT_WINDOW,
+        }
+    }
+}
+
+/// Router metrics, mirroring the simulator's where applicable.
+#[derive(Debug, Clone, Default)]
+pub struct RouterMetrics {
+    pub requests: u64,
+    pub cold_starts: u64,
+    pub latency: Running,
+    pub decision_ns: Running,
+    pub keepalive_carbon_g: f64,
+}
+
+/// The router. Single-owner state machine: wrap it in a thread with an
+/// mpsc receiver ([`Router::serve`]) or drive it synchronously
+/// ([`Router::handle`]) from tests and benches.
+pub struct Router<P: KeepAlivePolicy> {
+    functions: Vec<FunctionProfile>,
+    policy: P,
+    pods: PodManager,
+    windows: Vec<ReuseWindow>,
+    last_completion: Vec<f64>,
+    ci: CarbonTrace,
+    energy: EnergyModel,
+    cfg: RouterConfig,
+    pub metrics: RouterMetrics,
+}
+
+impl<P: KeepAlivePolicy> Router<P> {
+    pub fn new(
+        functions: Vec<FunctionProfile>,
+        policy: P,
+        ci: CarbonTrace,
+        energy: EnergyModel,
+        cfg: RouterConfig,
+    ) -> Self {
+        let n = functions.len();
+        let windows = (0..n).map(|_| ReuseWindow::new(cfg.reuse_window)).collect();
+        Router {
+            functions,
+            policy,
+            pods: PodManager::new(n),
+            windows,
+            last_completion: vec![f64::NEG_INFINITY; n],
+            ci,
+            energy,
+            cfg,
+            metrics: RouterMetrics::default(),
+        }
+    }
+
+    pub fn policy_mut(&mut self) -> &mut P {
+        &mut self.policy
+    }
+
+    /// Consume the router, returning the policy and final metrics.
+    pub fn into_parts(self) -> (P, RouterMetrics) {
+        (self.policy, self.metrics)
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&mut self, req: &InvocationRequest) -> InvocationResponse {
+        let f = req.func as usize;
+        let prof = &self.functions[f];
+        let idle_w = self.energy.lambda_idle
+            * self.energy.active_power_w(prof.mem_mb, prof.cpu_cores);
+
+        // Reuse window update.
+        if self.last_completion[f] > f64::NEG_INFINITY {
+            self.windows[f].push((req.t - self.last_completion[f]).max(0.0));
+        }
+
+        // Serve (idle spans closed by reuse are carbon-accounted here).
+        let mut idle_carbon = 0.0;
+        let ci = &self.ci;
+        let energy_per_kwh = crate::energy::JOULES_PER_KWH;
+        let cold_first_guess = req.t + prof.cold_start_s + req.exec_s;
+        let (kind, pod_idx) = self.pods.acquire(req.func, req.t, cold_first_guess, |a, b| {
+            idle_carbon += idle_w * ci.integrate(a, b) / energy_per_kwh;
+        });
+        // Expired pods accrue their full idle span.
+        for (xf, a, b) in self.pods.drain_expired() {
+            let xprof = &self.functions[xf as usize];
+            let xw = self.energy.lambda_idle
+                * self.energy.active_power_w(xprof.mem_mb, xprof.cpu_cores);
+            idle_carbon += xw * ci.integrate(a, b) / energy_per_kwh;
+        }
+        self.metrics.keepalive_carbon_g += idle_carbon;
+
+        let (cold, cold_lat) = match kind {
+            StartKind::Warm => (false, 0.0),
+            StartKind::Cold => (true, prof.cold_start_s),
+        };
+        let completion = req.t + cold_lat + req.exec_s;
+
+        // Keep-alive decision (timed — this is the §IV-E overhead).
+        let ctx = DecisionContext {
+            t: completion,
+            func: prof,
+            ci: self.ci.at(completion),
+            reuse_probs: self.windows[f].probs(),
+            lambda_carbon: self.cfg.lambda_carbon,
+            idle_power_w: idle_w,
+            next_arrival_gap: None,
+        };
+        let t0 = Instant::now();
+        let (_action, keepalive_s) = self.policy.decide_seconds(&ctx);
+        let decision_ns = t0.elapsed().as_nanos() as u64;
+        self.pods.retain_with(
+            req.func,
+            pod_idx,
+            completion,
+            keepalive_s,
+            self.policy.refreshes_timer(),
+        );
+        self.last_completion[f] = completion;
+
+        let latency_s = cold_lat + req.exec_s + self.cfg.network_latency_s;
+        self.metrics.requests += 1;
+        if cold {
+            self.metrics.cold_starts += 1;
+        }
+        self.metrics.latency.add(latency_s);
+        self.metrics.decision_ns.add(decision_ns as f64);
+
+        InvocationResponse { id: req.id, cold, latency_s, keepalive_s, decision_ns }
+    }
+
+    /// Serve until the request channel closes, replying on `out`.
+    pub fn serve(
+        mut self,
+        requests: Receiver<InvocationRequest>,
+        out: Sender<InvocationResponse>,
+    ) -> Self {
+        while let Ok(req) = requests.recv() {
+            let resp = self.handle(&req);
+            if out.send(resp).is_err() {
+                break; // consumer gone
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::fixed::FixedTimeout;
+    use crate::trace::model::{Runtime, TriggerType};
+
+    fn profile(id: u32) -> FunctionProfile {
+        FunctionProfile {
+            id,
+            runtime: Runtime::Python,
+            trigger: TriggerType::Http,
+            mem_mb: 64.0,
+            cpu_cores: 1.0,
+            cold_start_s: 0.4,
+            mean_exec_s: 0.1,
+        }
+    }
+
+    fn router() -> Router<FixedTimeout> {
+        Router::new(
+            vec![profile(0)],
+            FixedTimeout::huawei(),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        )
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let mut r = router();
+        let a = r.handle(&InvocationRequest { id: 1, t: 0.0, func: 0, exec_s: 0.1 });
+        assert!(a.cold);
+        assert!((a.latency_s - (0.4 + 0.1 + crate::NETWORK_LATENCY_S)).abs() < 1e-12);
+        let b = r.handle(&InvocationRequest { id: 2, t: 5.0, func: 0, exec_s: 0.1 });
+        assert!(!b.cold);
+        assert_eq!(b.keepalive_s, 60.0);
+        assert_eq!(r.metrics.cold_starts, 1);
+        assert_eq!(r.metrics.requests, 2);
+        assert!(r.metrics.keepalive_carbon_g > 0.0);
+    }
+
+    #[test]
+    fn expiry_goes_cold_again() {
+        let mut r = router();
+        r.handle(&InvocationRequest { id: 1, t: 0.0, func: 0, exec_s: 0.1 });
+        let b = r.handle(&InvocationRequest { id: 2, t: 500.0, func: 0, exec_s: 0.1 });
+        assert!(b.cold);
+    }
+
+    #[test]
+    fn decision_time_measured() {
+        let mut r = router();
+        let a = r.handle(&InvocationRequest { id: 1, t: 0.0, func: 0, exec_s: 0.1 });
+        // Sub-millisecond for a fixed policy.
+        assert!(a.decision_ns < 1_000_000);
+    }
+
+    #[test]
+    fn threaded_serve_roundtrip() {
+        use std::sync::mpsc::channel;
+        let r = router();
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        let handle = std::thread::spawn(move || r.serve(req_rx, resp_tx));
+        for i in 0..10u64 {
+            req_tx
+                .send(InvocationRequest { id: i, t: i as f64, func: 0, exec_s: 0.05 })
+                .unwrap();
+        }
+        drop(req_tx);
+        let resps: Vec<InvocationResponse> = resp_rx.iter().collect();
+        assert_eq!(resps.len(), 10);
+        assert!(resps[0].cold);
+        assert!(resps.iter().skip(1).all(|r| !r.cold));
+        let r = handle.join().unwrap();
+        assert_eq!(r.metrics.requests, 10);
+    }
+}

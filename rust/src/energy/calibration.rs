@@ -1,0 +1,131 @@
+//! FunctionBench energy calibration (paper Table II).
+//!
+//! The paper validates its simulator constants by profiling a FunctionBench
+//! deployment with Kepler on an HPE DL385 (dual EPYC 7513). We cannot
+//! re-run that testbed, so Table II is embedded verbatim as the calibration
+//! dataset. The simulator consumes only the *derived* constants — λ_idle
+//! and per-resource power — and `experiments::table2` regenerates the table
+//! plus the λ_idle summary from this data to validate the round trip.
+
+/// One Table II row: phase-level energy profile of a FunctionBench function.
+#[derive(Debug, Clone)]
+pub struct BenchProfile {
+    pub name: &'static str,
+    pub input: &'static str,
+    pub mem_mb: f64,
+    pub cold_start_ms: f64,
+    pub compute_ms: f64,
+    pub cold_active_j: f64,
+    pub compute_active_j: f64,
+    pub keepalive_1min_j: f64,
+    pub compute_power_w: f64,
+    pub keepalive_power_w: f64,
+    /// λ_idle = keep-alive / compute total power ratio.
+    pub lambda_idle: f64,
+}
+
+/// Table II, verbatim from the paper (§IV-A1).
+pub const FUNCTIONBENCH: [BenchProfile; 10] = [
+    BenchProfile { name: "Float Operations", input: "10,000,000", mem_mb: 44.0, cold_start_ms: 112.2, compute_ms: 3340.86, cold_active_j: 0.94, compute_active_j: 15.08, keepalive_1min_j: 78.29, compute_power_w: 6.37, keepalive_power_w: 3.19, lambda_idle: 0.50 },
+    BenchProfile { name: "MatMul", input: "10,000", mem_mb: 95.0, cold_start_ms: 166.5, compute_ms: 2393.41, cold_active_j: 0.27, compute_active_j: 144.41, keepalive_1min_j: 76.98, compute_power_w: 86.64, keepalive_power_w: 28.89, lambda_idle: 0.33 },
+    BenchProfile { name: "Linpack", input: "100,000", mem_mb: 97.0, cold_start_ms: 76.33, compute_ms: 6401.45, cold_active_j: 0.7, compute_active_j: 436.9, keepalive_1min_j: 92.4, compute_power_w: 147.29, keepalive_power_w: 70.82, lambda_idle: 0.48 },
+    BenchProfile { name: "Image Processing", input: "28.4 MB", mem_mb: 68.0, cold_start_ms: 2441.68, compute_ms: 6761.82, cold_active_j: 11.13, compute_active_j: 20.69, keepalive_1min_j: 81.6, compute_power_w: 4.98, keepalive_power_w: 3.21, lambda_idle: 0.64 },
+    BenchProfile { name: "Video Processing", input: "742 KB", mem_mb: 233.0, cold_start_ms: 12414.77, compute_ms: 2403.04, cold_active_j: 19.05, compute_active_j: 6.82, keepalive_1min_j: 72.68, compute_power_w: 4.65, keepalive_power_w: 3.03, lambda_idle: 0.65 },
+    BenchProfile { name: "Chameleon", input: "[500,100]", mem_mb: 57.0, cold_start_ms: 71.6, compute_ms: 249.52, cold_active_j: 0.52, compute_active_j: 1.84, keepalive_1min_j: 81.1, compute_power_w: 9.27, keepalive_power_w: 3.14, lambda_idle: 0.34 },
+    BenchProfile { name: "pyaes", input: "200 iterations", mem_mb: 42.0, cold_start_ms: 563.17, compute_ms: 1567.58, cold_active_j: 3.41, compute_active_j: 6.34, keepalive_1min_j: 66.78, compute_power_w: 6.02, keepalive_power_w: 2.87, lambda_idle: 0.48 },
+    BenchProfile { name: "Feature Extractor", input: "30.5 MB", mem_mb: 133.0, cold_start_ms: 109.31, compute_ms: 2323.78, cold_active_j: 0.15, compute_active_j: 10.40, keepalive_1min_j: 75.04, compute_power_w: 6.33, keepalive_power_w: 3.06, lambda_idle: 0.48 },
+    BenchProfile { name: "Model Training", input: "15.23 MB", mem_mb: 172.0, cold_start_ms: 115.58, compute_ms: 2485.6, cold_active_j: 2.96, compute_active_j: 31.66, keepalive_1min_j: 79.2, compute_power_w: 14.56, keepalive_power_w: 3.12, lambda_idle: 0.21 },
+    BenchProfile { name: "Classification Image", input: "28.4 MB", mem_mb: 275.0, cold_start_ms: 8642.95, compute_ms: 1591.42, cold_active_j: 21.39, compute_active_j: 2.96, keepalive_1min_j: 71.42, compute_power_w: 3.68, keepalive_power_w: 3.05, lambda_idle: 0.83 },
+];
+
+/// Measured λ_idle range across FunctionBench: (min, max, mean).
+pub fn lambda_idle_stats() -> (f64, f64, f64) {
+    let xs: Vec<f64> = FUNCTIONBENCH.iter().map(|b| b.lambda_idle).collect();
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    (min, max, mean)
+}
+
+/// The paper's simulation choice: λ_idle = 0.2, conservative relative to
+/// every measured value (§IV-A1).
+pub const SIMULATION_LAMBDA_IDLE: f64 = 0.2;
+
+/// Validate the paper's observation that cold-start *duration* predicts
+/// cold-start energy: Pearson correlation between `cold_start_ms` and
+/// `cold_active_j` across the benchmark suite.
+pub fn cold_duration_energy_correlation() -> f64 {
+    let xs: Vec<f64> = FUNCTIONBENCH.iter().map(|b| b.cold_start_ms).collect();
+    let ys: Vec<f64> = FUNCTIONBENCH.iter().map(|b| b.cold_active_j).collect();
+    pearson(&xs, &ys)
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys.iter()) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_range_matches_paper() {
+        let (min, max, mean) = lambda_idle_stats();
+        assert!((min - 0.21).abs() < 1e-9);
+        assert!((max - 0.83).abs() < 1e-9);
+        assert!(mean > 0.4 && mean < 0.6);
+    }
+
+    #[test]
+    fn simulation_lambda_is_conservative() {
+        let (min, _, _) = lambda_idle_stats();
+        assert!(SIMULATION_LAMBDA_IDLE <= min);
+    }
+
+    #[test]
+    fn cold_duration_predicts_energy() {
+        // Paper: "cold-start phase duration is a good predictor for the
+        // respective energy cost" — expect strong positive correlation.
+        let r = cold_duration_energy_correlation();
+        assert!(r > 0.8, "pearson r = {r}");
+    }
+
+    #[test]
+    fn table_has_expected_outliers() {
+        // Image/Video Processing and Image Classification have the long
+        // cold starts the paper calls out.
+        let long: Vec<&str> = FUNCTIONBENCH
+            .iter()
+            .filter(|b| b.cold_start_ms > 2000.0)
+            .map(|b| b.name)
+            .collect();
+        assert_eq!(
+            long,
+            vec!["Image Processing", "Video Processing", "Classification Image"]
+        );
+    }
+
+    #[test]
+    fn keepalive_power_consistent_with_ratio() {
+        for b in &FUNCTIONBENCH {
+            let ratio = b.keepalive_power_w / b.compute_power_w;
+            assert!(
+                (ratio - b.lambda_idle).abs() < 0.02,
+                "{}: ratio {ratio} vs lambda {}",
+                b.name,
+                b.lambda_idle
+            );
+        }
+    }
+}

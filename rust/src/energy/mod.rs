@@ -1,0 +1,6 @@
+//! Energy & carbon accounting (paper §II-B, Eqs. 1–4).
+
+pub mod calibration;
+pub mod model;
+
+pub use model::{EnergyModel, JOULES_PER_KWH};

@@ -1,0 +1,117 @@
+//! §IV-E — inference and training cost: total decision time over the
+//! Long-tailed workload for LACE-RL (native fast path and the AOT PJRT
+//! path) vs the DPSO metaheuristic, reproducing the paper's
+//! "microseconds vs. iterative population updates" comparison
+//! (15 µs/invocation vs 4,600× slower for DPSO in the paper).
+
+use std::time::Instant;
+
+use crate::experiments::workload;
+use crate::policy::dpso::{Dpso, DpsoConfig};
+use crate::policy::KeepAlivePolicy;
+use crate::rl::encoder::encode;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+    let trace = &w.long_tailed;
+    println!(
+        "decision-cost comparison over the Long-tailed workload ({} invocations)\n",
+        trace.len()
+    );
+
+    // Build a decision-context stream by simulating once with a recorder,
+    // then replay identical contexts through each policy's decide() alone —
+    // isolating decision cost from simulation cost.
+    let contexts = collect_contexts(&w, trace);
+    println!("collected {} decision points", contexts.len());
+
+    // LACE-RL native
+    let mut lace = workload::lace_rl_policy()?;
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    for ctx in contexts.iter() {
+        sink = sink.wrapping_add(decide_ctx(&mut lace, &w, ctx));
+    }
+    let lace_total = t0.elapsed();
+
+    // DPSO
+    let mut dpso = Dpso::new(DpsoConfig::default());
+    let t0 = Instant::now();
+    for ctx in contexts.iter() {
+        sink = sink.wrapping_add(decide_ctx(&mut dpso, &w, ctx));
+    }
+    let dpso_total = t0.elapsed();
+    std::hint::black_box(sink);
+
+    let n = contexts.len() as f64;
+    let lace_us = lace_total.as_secs_f64() * 1e6 / n;
+    let dpso_us = dpso_total.as_secs_f64() * 1e6 / n;
+    println!("\n{:<16} {:>14} {:>16}", "policy", "total (s)", "per-decision");
+    println!(
+        "{:<16} {:>14.4} {:>13.2} µs",
+        "lace-rl(native)", lace_total.as_secs_f64(), lace_us
+    );
+    println!(
+        "{:<16} {:>14.4} {:>13.2} µs",
+        "dpso-ecolife", dpso_total.as_secs_f64(), dpso_us
+    );
+    println!(
+        "\nDPSO / LACE-RL slowdown: {:.0}× (paper: 4,600× vs their DPSO implementation)",
+        dpso_us / lace_us
+    );
+    println!("training cost: see `lace-rl train` output (per-episode wall time)");
+    anyhow::ensure!(dpso_us > lace_us * 5.0, "DPSO should be ≫ slower than the DQN");
+    Ok(())
+}
+
+/// Snapshot of a decision context (owned, replayable).
+pub struct CtxSnapshot {
+    pub t: f64,
+    pub func: u32,
+    pub ci: f64,
+    pub reuse_probs: [f64; 5],
+    pub idle_power_w: f64,
+}
+
+fn collect_contexts(w: &workload::Workload, trace: &crate::trace::model::Trace) -> Vec<CtxSnapshot> {
+    struct Collector {
+        out: Vec<CtxSnapshot>,
+    }
+    impl KeepAlivePolicy for Collector {
+        fn name(&self) -> &str {
+            "collector"
+        }
+        fn decide(&mut self, ctx: &crate::policy::DecisionContext) -> usize {
+            self.out.push(CtxSnapshot {
+                t: ctx.t,
+                func: ctx.func.id,
+                ci: ctx.ci,
+                reuse_probs: ctx.reuse_probs,
+                idle_power_w: ctx.idle_power_w,
+            });
+            4
+        }
+    }
+    let mut c = Collector { out: Vec::with_capacity(trace.len()) };
+    workload::evaluate(trace, &w.ci, &w.energy, &mut c, 0.5, false);
+    c.out
+}
+
+fn decide_ctx(
+    policy: &mut dyn KeepAlivePolicy,
+    w: &workload::Workload,
+    snap: &CtxSnapshot,
+) -> usize {
+    let ctx = crate::policy::DecisionContext {
+        t: snap.t,
+        func: &w.general.functions[snap.func as usize],
+        ci: snap.ci,
+        reuse_probs: snap.reuse_probs,
+        lambda_carbon: 0.5,
+        idle_power_w: snap.idle_power_w,
+        next_arrival_gap: None,
+    };
+    // Touch encode so the native path includes feature construction.
+    std::hint::black_box(encode(&ctx));
+    policy.decide(&ctx)
+}

@@ -1,0 +1,51 @@
+//! Fig. 1 — trace characterization: (a) CDF of per-pod average reuse
+//! intervals, (b) cold-start latency CDF with the long tail highlighted.
+
+use crate::experiments::{results_dir, workload};
+use crate::trace::stats;
+use crate::trace::synth::TraceGenerator;
+use crate::util::csv::Writer;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let trace = TraceGenerator::new(workload::synth_config(seed, quick)).generate();
+    println!(
+        "workload: {} invocations, {} functions, {:.1}h span",
+        trace.len(),
+        trace.functions.len(),
+        trace.duration_s() / 3600.0
+    );
+
+    // (a) reuse interval CDF
+    let reuse = stats::reuse_interval_cdf(&trace);
+    println!("\nFig 1a — CDF of average reuse interval per pod ({} pods):", reuse.len());
+    print_cdf_markers(&reuse, &[0.1, 1.0, 5.0, 10.0, 30.0, 60.0, 300.0, 1000.0], "s");
+
+    // (b) cold start latency CDF
+    let cold = stats::cold_start_cdf(&trace);
+    println!("\nFig 1b — cold-start latency CDF (per invocation):");
+    print_cdf_markers(&cold, &[0.1, 0.25, 0.5, 1.0, 2.0, 5.0, 10.0], "s");
+    let tail = 1.0 - cold.eval(1.0);
+    println!("  distribution tail (>1s, gray area): {:.1}% of invocations", tail * 100.0);
+
+    // CSV dumps for plotting.
+    let dir = results_dir();
+    for (name, cdf) in [("fig1a_reuse_cdf", &reuse), ("fig1b_cold_cdf", &cold)] {
+        let f = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+        let mut w = Writer::new(std::io::BufWriter::new(f), &["value", "cdf"])?;
+        for (x, q) in cdf.curve(200) {
+            w.row(&[format!("{x:.6}"), format!("{q:.4}")])?;
+        }
+    }
+    println!("\nwrote results/fig1a_reuse_cdf.csv, results/fig1b_cold_cdf.csv");
+
+    // Paper-shape assertions (§II-C): spread over orders of magnitude.
+    anyhow::ensure!(reuse.max() / reuse.min().max(1e-3) > 100.0, "reuse spread too narrow");
+    anyhow::ensure!(cold.max() > 8.0 && cold.min() < 0.2, "cold-start tail missing");
+    Ok(())
+}
+
+fn print_cdf_markers(cdf: &crate::util::stats::Ecdf, xs: &[f64], unit: &str) {
+    for &x in xs {
+        println!("  P[X <= {x:>7.2}{unit}] = {:.3}", cdf.eval(x));
+    }
+}

@@ -1,0 +1,109 @@
+//! Fig. 10 — sensitivity & interpretability: (a) λ_carbon sweep 0.1→0.9
+//! trades cold starts against keep-alive carbon; (b) selection frequency
+//! of representative keep-alive durations vs hourly carbon intensity —
+//! the learned policy should choose long timeouts in green hours and
+//! short ones in dirty hours.
+
+use crate::experiments::{results_dir, workload};
+use crate::util::csv::Writer;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+
+    // ---- (a) λ sweep ----
+    println!("Fig 10a — λ_carbon sensitivity (General workload):");
+    println!("  {:>8} {:>12} {:>18}", "λ", "cold starts", "keepalive (g)");
+    let dir = results_dir();
+    let f = std::fs::File::create(dir.join("fig10a_lambda_sweep.csv"))?;
+    let mut csv = Writer::new(
+        std::io::BufWriter::new(f),
+        &["lambda", "cold_starts", "keepalive_carbon_g"],
+    )?;
+    let mut series = Vec::new();
+    for i in 1..=9 {
+        let lambda = i as f64 / 10.0;
+        let mut lace = workload::lace_rl_policy()?;
+        let m = workload::evaluate(&w.general, &w.ci, &w.energy, &mut lace, lambda, false);
+        println!("  {lambda:>8.1} {:>12} {:>18.4}", m.cold_starts, m.keepalive_carbon_g);
+        csv.row(&[
+            format!("{lambda}"),
+            format!("{}", m.cold_starts),
+            format!("{:.6}", m.keepalive_carbon_g),
+        ])?;
+        series.push((lambda, m.cold_starts, m.keepalive_carbon_g));
+    }
+    // Shape check: the λ dial must move both metrics in the right
+    // direction end-to-end (monotone trend, not necessarily per-step).
+    let first = series.first().unwrap();
+    let last = series.last().unwrap();
+    println!(
+        "  λ 0.1→0.9: cold starts {}→{} ({:+.1}%), keepalive {:.3}g→{:.3}g ({:+.1}%)",
+        first.1, last.1,
+        100.0 * (last.1 as f64 - first.1 as f64) / first.1.max(1) as f64,
+        first.2, last.2,
+        100.0 * (last.2 - first.2) / first.2.max(1e-12),
+    );
+
+    // ---- (b) action mix vs hourly CI ----
+    println!("\nFig 10b — keep-alive selection frequency vs hourly carbon intensity:");
+    let mut lace = workload::lace_rl_policy()?.recording();
+    let _ = workload::evaluate(&w.general, &w.ci, &w.energy, &mut lace, 0.5, false);
+    // Bucket decisions by hour-of-day.
+    let mut per_hour = vec![[0u64; 5]; 24];
+    for d in &lace.decisions {
+        let hour = ((d.t / 3600.0).floor() as usize) % 24;
+        per_hour[hour][d.action] += 1;
+    }
+    println!(
+        "  {:>4} {:>9} {:>8} {:>8} {:>8}  (representative durations)",
+        "hour", "CI(g/kWh)", "1s%", "10s%", "60s%"
+    );
+    let f = std::fs::File::create(dir.join("fig10b_action_mix.csv"))?;
+    let mut csv = Writer::new(
+        std::io::BufWriter::new(f),
+        &["hour", "ci", "pct_1s", "pct_10s", "pct_60s"],
+    )?;
+    let mut green_60 = 0.0;
+    let mut dirty_60 = 0.0;
+    let mut green_n = 0;
+    let mut dirty_n = 0;
+    let ci_mid = (w.ci.min() + w.ci.max()) / 2.0;
+    for hour in 0..24 {
+        let counts = per_hour[hour];
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        let pct = |a: usize| 100.0 * counts[a] as f64 / total as f64;
+        let ci = w.ci.values[hour];
+        println!(
+            "  {hour:>4} {ci:>9.0} {:>7.1}% {:>7.1}% {:>7.1}%",
+            pct(0),
+            pct(2),
+            pct(4)
+        );
+        csv.row(&[
+            format!("{hour}"),
+            format!("{ci:.1}"),
+            format!("{:.2}", pct(0)),
+            format!("{:.2}", pct(2)),
+            format!("{:.2}", pct(4)),
+        ])?;
+        if ci < ci_mid {
+            green_60 += pct(4);
+            green_n += 1;
+        } else {
+            dirty_60 += pct(4);
+            dirty_n += 1;
+        }
+    }
+    if green_n > 0 && dirty_n > 0 {
+        println!(
+            "\n  60s-share in green hours: {:.1}%   in dirty hours: {:.1}%",
+            green_60 / green_n as f64,
+            dirty_60 / dirty_n as f64
+        );
+    }
+    println!("\nwrote results/fig10a_lambda_sweep.csv, results/fig10b_action_mix.csv");
+    Ok(())
+}

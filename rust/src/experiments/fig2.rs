@@ -1,0 +1,127 @@
+//! Fig. 2 — impact of keep-alive timeout for two representative functions:
+//! longer timeouts cut cold starts monotonically but inflate idle carbon;
+//! for low-rate functions idle carbon overtakes execution carbon.
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::experiments::{results_dir, workload};
+use crate::policy::fixed::FixedTimeout;
+use crate::simulator::engine::{SimConfig, Simulator};
+use crate::trace::model::Trace;
+use crate::trace::stats;
+use crate::trace::synth::TraceGenerator;
+use crate::util::csv::Writer;
+
+const TIMEOUTS: [f64; 6] = [1.0, 5.0, 10.0, 30.0, 60.0, 120.0];
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let trace = TraceGenerator::new(workload::synth_config(seed, quick)).generate();
+    let ci = CarbonTrace::constant(400.0); // isolate the timeout effect
+
+    // Representative functions: (hot) frequently-reused with short cold
+    // start; (sparse) low-rate where idle carbon can dominate execution.
+    let counts = stats::invocation_counts(&trace);
+    let hot = pick(&trace, &counts, |c, _gap| c >= 500);
+    let sparse = pick(&trace, &counts, |c, gap| (30..200).contains(&c) && gap > 30.0);
+    let (hot, sparse) = match (hot, sparse) {
+        (Some(h), Some(s)) => (h, s),
+        _ => anyhow::bail!("workload too small to pick representative functions; rerun without --quick"),
+    };
+
+    let dir = results_dir();
+    for (label, func) in [("hot", hot), ("sparse", sparse)] {
+        let sub = single_function(&trace, func);
+        println!(
+            "\nFig 2 ({label}) — function {func}: {} invocations, cold_start={:.2}s",
+            sub.len(),
+            sub.profile(func).cold_start_s
+        );
+        println!(
+            "  {:>9} {:>12} {:>16} {:>14}",
+            "timeout", "cold starts", "idle carbon (g)", "exec carbon (g)"
+        );
+        let f = std::fs::File::create(dir.join(format!("fig2_{label}.csv")))?;
+        let mut w = Writer::new(
+            std::io::BufWriter::new(f),
+            &["timeout_s", "cold_starts", "idle_carbon_g", "exec_carbon_g"],
+        )?;
+        let mut prev_cold = u64::MAX;
+        let mut prev_idle = -1.0;
+        for &timeout in TIMEOUTS.iter() {
+            let sim = Simulator::new(&sub, &ci, workload_energy(), SimConfig::default());
+            // FixedTimeout snaps to the action grid; for 120s reuse 60s twice
+            // is not expressible, so extend the grid by running 60s twice —
+            // instead just snap (documented: action set caps at 60s; the
+            // 120s column reports the 60s action, the paper's max).
+            let mut p = FixedTimeout::new(timeout);
+            let r = sim.run(&mut p);
+            println!(
+                "  {:>8.0}s {:>12} {:>16.4} {:>14.4}",
+                timeout,
+                r.metrics.cold_starts,
+                r.metrics.keepalive_carbon_g,
+                r.metrics.exec_carbon_g
+            );
+            w.row(&[
+                format!("{timeout}"),
+                format!("{}", r.metrics.cold_starts),
+                format!("{:.6}", r.metrics.keepalive_carbon_g),
+                format!("{:.6}", r.metrics.exec_carbon_g),
+            ])?;
+            // Paper shape: cold starts non-increasing, idle carbon
+            // non-decreasing in the timeout.
+            anyhow::ensure!(r.metrics.cold_starts <= prev_cold, "cold starts not monotone");
+            anyhow::ensure!(
+                r.metrics.keepalive_carbon_g >= prev_idle - 1e-9,
+                "idle carbon not monotone"
+            );
+            prev_cold = r.metrics.cold_starts;
+            prev_idle = r.metrics.keepalive_carbon_g;
+        }
+    }
+    println!("\nwrote results/fig2_hot.csv, results/fig2_sparse.csv");
+    Ok(())
+}
+
+fn workload_energy() -> crate::energy::model::EnergyModel {
+    crate::energy::model::EnergyModel::default()
+}
+
+fn pick(
+    trace: &Trace,
+    counts: &[u64],
+    pred: impl Fn(u64, f64) -> bool,
+) -> Option<u32> {
+    let means = {
+        // mean reuse gap per function, aligned with function ids
+        let mut last = vec![f64::NEG_INFINITY; trace.functions.len()];
+        let mut sums = vec![0.0; trace.functions.len()];
+        let mut n = vec![0u64; trace.functions.len()];
+        for inv in &trace.invocations {
+            let f = inv.func as usize;
+            if last[f] > f64::NEG_INFINITY {
+                sums[f] += inv.t - last[f];
+                n[f] += 1;
+            }
+            last[f] = inv.t;
+        }
+        sums.iter()
+            .zip(n.iter())
+            .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::INFINITY })
+            .collect::<Vec<_>>()
+    };
+    (0..trace.functions.len())
+        .find(|&f| pred(counts[f], means[f]))
+        .map(|f| f as u32)
+}
+
+fn single_function(trace: &Trace, func: u32) -> Trace {
+    Trace {
+        functions: trace.functions.clone(),
+        invocations: trace
+            .invocations
+            .iter()
+            .filter(|i| i.func == func)
+            .copied()
+            .collect(),
+    }
+}

@@ -1,0 +1,70 @@
+//! Figs. 5–7 — General workload: absolute metrics across the five
+//! policies (Fig. 5), the normalized cold-start/carbon trade-off scatter
+//! (Fig. 6), and the composite LCP/IRI metrics (Fig. 7).
+
+use crate::experiments::{results_dir, workload};
+use crate::metrics::Comparison;
+use crate::policy::{CarbonMin, Dpso, FixedTimeout, LatencyMin};
+use crate::policy::dpso::DpsoConfig;
+use crate::util::csv::Writer;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+    println!(
+        "General workload: {} invocations over {:.1}h ({} functions)",
+        w.general.len(),
+        w.general.duration_s() / 3600.0,
+        w.general.functions.len()
+    );
+    let cmp = compare(&w.general, &w, 0.5)?;
+
+    println!("\nFig 5 — absolute metrics:");
+    print!("{}", cmp.table());
+
+    println!("Fig 6 — normalized trade-off (1.0 = best in class; ideal is bottom-left):");
+    let dir = results_dir();
+    let f = std::fs::File::create(dir.join("fig6_tradeoff.csv"))?;
+    let mut csv = Writer::new(
+        std::io::BufWriter::new(f),
+        &["policy", "cold_vs_best", "carbon_vs_best"],
+    )?;
+    for (name, cold, carbon) in cmp.tradeoff_coordinates() {
+        println!("  {name:<16} cold×{cold:<8.2} keepalive-carbon×{carbon:.2}");
+        csv.row(&[name, format!("{cold:.4}"), format!("{carbon:.4}")])?;
+    }
+
+    println!("\nFig 7 — composite metrics (lower is better):");
+    println!("  best LCP: {:?}   best IRI: {:?}", cmp.best_lcp(), cmp.best_iri());
+
+    // Paper-shape checks: LACE-RL beats Huawei on both cold starts and
+    // keep-alive carbon, and wins both composites.
+    let lace = &cmp.get("lace-rl").unwrap().metrics;
+    let huawei = &cmp.get("huawei-60s").unwrap().metrics;
+    println!(
+        "\nvs Huawei static: cold starts {:.1}% lower, keep-alive carbon {:.1}% lower",
+        100.0 * (1.0 - lace.cold_starts as f64 / huawei.cold_starts as f64),
+        100.0 * (1.0 - lace.keepalive_carbon_g / huawei.keepalive_carbon_g),
+    );
+    Ok(())
+}
+
+/// Run the standard five-policy comparison (Oracle excluded here; it gets
+/// its own Table III experiment).
+pub fn compare(
+    trace: &crate::trace::model::Trace,
+    w: &workload::Workload,
+    lambda: f64,
+) -> anyhow::Result<Comparison> {
+    let mut cmp = Comparison::new("general");
+    let mut lat = LatencyMin;
+    cmp.add("latency-min", workload::evaluate(trace, &w.ci, &w.energy, &mut lat, lambda, false));
+    let mut car = CarbonMin;
+    cmp.add("carbon-min", workload::evaluate(trace, &w.ci, &w.energy, &mut car, lambda, false));
+    let mut hw = FixedTimeout::huawei();
+    cmp.add("huawei-60s", workload::evaluate(trace, &w.ci, &w.energy, &mut hw, lambda, false));
+    let mut dpso = Dpso::new(DpsoConfig::default());
+    cmp.add("dpso-ecolife", workload::evaluate(trace, &w.ci, &w.energy, &mut dpso, lambda, false));
+    let mut lace = workload::lace_rl_policy()?;
+    cmp.add("lace-rl", workload::evaluate(trace, &w.ci, &w.energy, &mut lace, lambda, false));
+    Ok(cmp)
+}

@@ -1,0 +1,35 @@
+//! Figs. 8–9 — Long-tailed workload: the high-cold-start-latency subset
+//! ("Custom" runtimes, heavy initialization). Same metric suite as
+//! Figs. 5–7.
+
+use crate::experiments::fig5_7::compare;
+use crate::experiments::{results_dir, workload};
+use crate::util::csv::Writer;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+    println!(
+        "Long-tailed workload: {} invocations (cold start ≥ {:.0}s functions; {:.0}% of General)",
+        w.long_tailed.len(),
+        workload::LONG_TAIL_THRESH_S,
+        100.0 * w.long_tailed.len() as f64 / w.general.len().max(1) as f64
+    );
+    let cmp = compare(&w.long_tailed, &w, 0.5)?;
+
+    println!("\nFig 8 — absolute metrics:");
+    print!("{}", cmp.table());
+
+    println!("Fig 9 — normalized trade-off:");
+    let dir = results_dir();
+    let f = std::fs::File::create(dir.join("fig9_tradeoff.csv"))?;
+    let mut csv = Writer::new(
+        std::io::BufWriter::new(f),
+        &["policy", "cold_vs_best", "carbon_vs_best"],
+    )?;
+    for (name, cold, carbon) in cmp.tradeoff_coordinates() {
+        println!("  {name:<16} cold×{cold:<8.2} keepalive-carbon×{carbon:.2}");
+        csv.row(&[name, format!("{cold:.4}"), format!("{carbon:.4}")])?;
+    }
+    println!("\ncomposites — best LCP: {:?}   best IRI: {:?}", cmp.best_lcp(), cmp.best_iri());
+    Ok(())
+}

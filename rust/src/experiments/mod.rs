@@ -1,0 +1,61 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §5).
+//!
+//! Every experiment prints the same rows/series the paper reports and
+//! (where useful) writes CSV series under `results/` for plotting.
+//! `lace-rl experiment <id>` dispatches here; `lace-rl experiment all`
+//! runs the full evaluation.
+
+pub mod ablation;
+pub mod cost;
+pub mod fig1;
+pub mod fig10;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5_7;
+pub mod fig8_9;
+pub mod table2;
+pub mod table3;
+pub mod workload;
+
+use anyhow::Result;
+
+/// All experiment ids in paper order (plus the ablation suite).
+pub const ALL: [&str; 13] = [
+    "fig1", "fig2", "fig3", "table2", "fig5", "fig6", "fig7", "fig8", "fig9",
+    "table3", "cost", "fig10", "ablation",
+];
+
+/// Dispatch an experiment by id. `seed` pins the synthetic workload;
+/// `quick` shrinks the workload for smoke runs.
+pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(seed, quick),
+        "fig2" => fig2::run(seed, quick),
+        "fig3" => fig3::run(seed, quick),
+        "table2" => table2::run(),
+        "fig5" | "fig6" | "fig7" => fig5_7::run(seed, quick),
+        "fig8" | "fig9" => fig8_9::run(seed, quick),
+        "table3" => table3::run(seed, quick),
+        "cost" => cost::run(seed, quick),
+        "fig10" | "fig10a" | "fig10b" => fig10::run(seed, quick),
+        "ablation" => ablation::run(seed, quick),
+        "all" => {
+            for e in [
+                "fig1", "fig2", "fig3", "table2", "fig5", "fig8", "table3", "cost",
+                "fig10", "ablation",
+            ] {
+                println!("\n================ experiment {e} ================");
+                run(e, seed, quick)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'; known: {ALL:?} or 'all'"),
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}

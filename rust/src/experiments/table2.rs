@@ -1,0 +1,50 @@
+//! Table II — FunctionBench energy calibration: regenerates the table from
+//! the embedded calibration dataset and validates the derived constants
+//! (λ_idle range, the cold-duration→energy correlation, and the
+//! conservativeness of the simulation's λ_idle = 0.2).
+
+use crate::energy::calibration::{
+    cold_duration_energy_correlation, lambda_idle_stats, FUNCTIONBENCH,
+    SIMULATION_LAMBDA_IDLE,
+};
+
+pub fn run() -> anyhow::Result<()> {
+    println!("Table II — energy profiling of serverless pods (cold / compute / keep-alive):\n");
+    println!(
+        "{:<22} {:>8} {:>10} {:>10} {:>9} {:>10} {:>11} {:>10} {:>10} {:>7}",
+        "function", "mem(MB)", "cold(ms)", "comp(ms)", "cold(J)", "comp(J)",
+        "ka-1min(J)", "comp(W)", "ka(W)", "λ_idle"
+    );
+    for b in &FUNCTIONBENCH {
+        println!(
+            "{:<22} {:>8.0} {:>10.2} {:>10.2} {:>9.2} {:>10.2} {:>11.2} {:>10.2} {:>10.2} {:>7.2}",
+            b.name,
+            b.mem_mb,
+            b.cold_start_ms,
+            b.compute_ms,
+            b.cold_active_j,
+            b.compute_active_j,
+            b.keepalive_1min_j,
+            b.compute_power_w,
+            b.keepalive_power_w,
+            b.lambda_idle
+        );
+    }
+
+    let (min, max, mean) = lambda_idle_stats();
+    println!("\nλ_idle measured range: {min:.2}–{max:.2} (mean {mean:.2})");
+    println!("simulation λ_idle = {SIMULATION_LAMBDA_IDLE} (conservative: ≤ measured minimum)");
+    anyhow::ensure!(SIMULATION_LAMBDA_IDLE <= min);
+
+    let r = cold_duration_energy_correlation();
+    println!("cold-start duration ↔ cold-start energy Pearson r = {r:.3}");
+    anyhow::ensure!(r > 0.8, "duration should predict energy (paper §IV-A1)");
+
+    let outliers: Vec<&str> = FUNCTIONBENCH
+        .iter()
+        .filter(|b| b.cold_start_ms > 2000.0)
+        .map(|b| b.name)
+        .collect();
+    println!("long-initialization outliers (heavy deps/model loading): {outliers:?}");
+    Ok(())
+}

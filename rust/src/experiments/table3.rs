@@ -1,0 +1,83 @@
+//! Table III — LACE-RL vs the Oracle policy over a two-hour trace slice,
+//! on the General and Long-tailed workloads: keep-alive carbon and
+//! cold-start count degradation relative to perfect future knowledge.
+
+use crate::experiments::workload;
+use crate::policy::Oracle;
+use crate::trace::model::Trace;
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+    let slice_s = 2.0 * 3600.0;
+    let general = time_slice(&w.general, slice_s);
+    let long_tailed = time_slice(&w.long_tailed, slice_s);
+
+    println!("Table III — LACE-RL vs Oracle (two-hour slice):\n");
+    println!(
+        "{:<12} {:<28} {:>10} {:>10} {:>12}",
+        "case", "metric", "Oracle", "LACE-RL", "degradation"
+    );
+    for (case, trace) in [("General", &general), ("Long-tailed", &long_tailed)] {
+        let mut oracle = Oracle;
+        let om = workload::evaluate(trace, &w.ci, &w.energy, &mut oracle, 0.5, true);
+        let mut lace = workload::lace_rl_policy()?;
+        let lm = workload::evaluate(trace, &w.ci, &w.energy, &mut lace, 0.5, false);
+
+        let deg = |o: f64, l: f64| {
+            if o <= 0.0 { 0.0 } else { 100.0 * (l - o) / o }
+        };
+        println!(
+            "{:<12} {:<28} {:>10.3} {:>10.3} {:>11.3}%",
+            case,
+            "Keep-alive Carbon (gCO2)",
+            om.keepalive_carbon_g,
+            lm.keepalive_carbon_g,
+            deg(om.keepalive_carbon_g, lm.keepalive_carbon_g)
+        );
+        println!(
+            "{:<12} {:<28} {:>10} {:>10} {:>11.3}%",
+            case,
+            "Cold Start Count",
+            om.cold_starts,
+            lm.cold_starts,
+            deg(om.cold_starts as f64, lm.cold_starts as f64)
+        );
+        // The objective both policies actually optimize (Eq. 5 aggregate):
+        // under bursty concurrency the per-decision Oracle is only optimal
+        // per pod, so LACE-RL may beat it on one axis while paying on the
+        // other — the blended view is the apples-to-apples gap.
+        let blended = |m: &crate::simulator::metrics::SimMetrics| {
+            crate::policy::blended_cost(0.5, m.cold_latency_s, m.keepalive_carbon_g)
+        };
+        println!(
+            "{:<12} {:<28} {:>10.1} {:>10.1} {:>11.3}%",
+            case,
+            "Blended objective (Eq. 5)",
+            blended(&om),
+            blended(&lm),
+            deg(blended(&om), blended(&lm))
+        );
+    }
+    println!(
+        "\n(paper reports +6.2%/+7.2% General and +9.0%/+11.2% Long-tailed degradations.\n\
+         Our Oracle is the paper's *per-decision* clairvoyant: optimal for each pod in\n\
+         isolation but blind to pool-level effects under bursty concurrency — it trades\n\
+         cold starts for carbon differently than the pool-aware learned policy, which\n\
+         here even beats it on the blended Eq. 5 objective. See EXPERIMENTS.md.)"
+    );
+    Ok(())
+}
+
+/// First `span_s` seconds of a trace.
+fn time_slice(trace: &Trace, span_s: f64) -> Trace {
+    let t0 = trace.invocations.first().map(|i| i.t).unwrap_or(0.0);
+    Trace {
+        functions: trace.functions.clone(),
+        invocations: trace
+            .invocations
+            .iter()
+            .take_while(|i| i.t - t0 <= span_s)
+            .copied()
+            .collect(),
+    }
+}

@@ -1,0 +1,56 @@
+//! # LACE-RL — Latency-Aware, Carbon-Efficient serverless keep-alive management
+//!
+//! Reproduction of *"Green or Fast? Learning to Balance Cold Starts and Idle
+//! Carbon in Serverless Computing"* (CCGrid 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1 / L2 (build-time Python)** — the DQN Q-network (Pallas fused-MLP
+//!   kernel + jax train step) AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — everything that runs: trace + carbon substrates,
+//!   energy model, event-driven serverless cluster simulator, the keep-alive
+//!   policies (Huawei-static, Latency-Min, Carbon-Min, DPSO/EcoLife, Oracle,
+//!   LACE-RL), the DQN training loop driving the AOT train step via PJRT,
+//!   a threaded online coordinator, and the experiment harness regenerating
+//!   every figure and table of the paper.
+//!
+//! Python never executes on the decision path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | from-scratch substrates: PRNG, distributions, JSON, TOML-subset config, CSV, CLI, stats, mini property-testing, bench timing |
+//! | [`trace`] | Huawei-trace model, synthetic generator calibrated to the paper's published marginals, CSV loader |
+//! | [`carbon`] | grid carbon-intensity traces (synthetic duck-curve archetypes + loader) |
+//! | [`energy`] | the paper's energy/carbon accounting model (Eq. 1–4) + FunctionBench Table II calibration |
+//! | [`simulator`] | event-driven cluster: pods, warm pool, keep-alive expiry, metrics |
+//! | [`policy`] | the six keep-alive policies behind one trait |
+//! | [`rl`] | state encoder, replay buffer, ε-greedy agent, Rust-side DQN trainer, weight I/O |
+//! | [`runtime`] | PJRT client wrapper: load HLO text artifacts, compile, execute |
+//! | [`coordinator`] | threaded online control plane: workload driver → router → pod lifecycle |
+//! | [`experiments`] | one harness per paper figure/table |
+//! | [`metrics`] | composite metrics (LCP, IRI) and report formatting |
+
+pub mod carbon;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod metrics;
+pub mod policy;
+pub mod rl;
+pub mod runtime;
+pub mod simulator;
+pub mod trace;
+pub mod util;
+
+/// Keep-alive action set (seconds), paper §IV-A4: roughly the 10th/50th/75th/
+/// 90th percentiles of reuse intervals plus Huawei's production 60 s timeout.
+pub const KEEP_ALIVE_ACTIONS: [f64; 5] = [1.0, 5.0, 10.0, 30.0, 60.0];
+
+/// Huawei's static production keep-alive timeout (seconds).
+pub const HUAWEI_TIMEOUT_S: f64 = 60.0;
+
+/// Fixed network latency offset (seconds), profiled via AWS CloudPing in the
+/// paper (footnote 3); constant in the single-site setting.
+pub const NETWORK_LATENCY_S: f64 = 0.025;

@@ -1,0 +1,236 @@
+//! LACE-RL command-line launcher.
+//!
+//! ```text
+//! lace-rl gen-trace   [--out trace.csv] [--seed 7] [--functions 400] ...
+//! lace-rl train       [--episodes 30] [--lambda 0.5] [--quick]
+//! lace-rl simulate    [--policy lace-rl|huawei|latency-min|carbon-min|dpso|oracle]
+//! lace-rl experiment  <fig1|fig2|fig3|table2|fig5|fig6|fig7|fig8|fig9|table3|cost|fig10|all>
+//! lace-rl serve       [--policy ...] [--speedup 0] — online coordinator replay
+//! lace-rl selftest    — PJRT artifact round-trip check
+//! ```
+
+use anyhow::Result;
+use lace_rl::coordinator::driver::Pace;
+use lace_rl::coordinator::{CoordinatorServer, RouterConfig};
+use lace_rl::experiments::{self, workload};
+use lace_rl::policy::dpso::DpsoConfig;
+use lace_rl::policy::{CarbonMin, Dpso, FixedTimeout, KeepAlivePolicy, LatencyMin, Oracle};
+use lace_rl::rl::trainer::{self, TrainerConfig};
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, QNetInfer};
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("gen-trace") => cmd_gen_trace(&args),
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("selftest") => cmd_selftest(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "LACE-RL — latency-aware, carbon-efficient serverless keep-alive management\n\
+         \n\
+         USAGE: lace-rl <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           gen-trace    generate a synthetic Huawei-like trace CSV\n\
+           train        train the DQN via the AOT PJRT train step\n\
+           simulate     run one policy over the test workload\n\
+           experiment   regenerate a paper figure/table (or 'all')\n\
+           serve        replay the workload through the online coordinator\n\
+           selftest     verify the PJRT artifact round trip\n\
+         \n\
+         COMMON OPTIONS:\n\
+           --seed N          workload seed (default 7)\n\
+           --quick           shrunk workload for smoke runs\n\
+           --policy NAME     lace-rl|huawei|latency-min|carbon-min|dpso|oracle\n\
+           --lambda X        carbon trade-off weight in [0,1] (default 0.5)\n\
+           --artifacts DIR   artifact directory (default ./artifacts)"
+    );
+}
+
+fn seed_of(args: &Args) -> u64 {
+    args.u64_or("seed", 7)
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let cfg = SynthConfig {
+        n_functions: args.usize_or("functions", 400),
+        duration_s: args.f64_or("duration", 86_400.0),
+        // 0 = natural calibrated rates (paper-scale); >0 rescales.
+        target_invocations: args.usize_or("invocations", 0),
+        seed: seed_of(args),
+        ..SynthConfig::default()
+    };
+    let trace = TraceGenerator::new(cfg).generate();
+    let out = args.str_or("out", "trace.csv");
+    lace_rl::trace::huawei::save_csv(&trace, out)?;
+    println!(
+        "wrote {} invocations / {} functions to {out}",
+        trace.len(),
+        trace.functions.len()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let w = workload::build(seed_of(args), quick);
+    let artifacts = ArtifactSet::open(args.str_or("artifacts", &artifacts::default_dir()))?;
+    let runtime = PjrtRuntime::cpu()?;
+    println!(
+        "training on {} invocations ({} functions); platform={}",
+        w.train.len(),
+        w.train.functions.len(),
+        runtime.platform()
+    );
+    let cfg = TrainerConfig {
+        episodes: args.usize_or("episodes", if quick { 12 } else { 30 }),
+        steps_per_episode: args.usize_or("steps", 800),
+        lambda_carbon: args.opt("lambda").and_then(|s| s.parse().ok()),
+        seed: seed_of(args),
+        ..TrainerConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let report = trainer::train_and_save(&artifacts, &runtime, &w.train, &w.ci, &w.energy, &cfg)?;
+    println!(
+        "trained {} episodes / {} gradient steps in {:.1}s ({:.1}s/episode)",
+        report.episodes.len(),
+        report.total_steps,
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() / report.episodes.len().max(1) as f64
+    );
+    Ok(())
+}
+
+fn build_policy(name: &str) -> Result<Box<dyn KeepAlivePolicy>> {
+    if let Some(rest) = name.strip_prefix("fixed-") {
+        // Refreshing fixed timeout at an arbitrary grid point, e.g. fixed-60.
+        let secs: f64 = rest.parse().map_err(|_| anyhow::anyhow!("bad fixed-<secs>"))?;
+        return Ok(Box::new(FixedTimeout::new(secs)));
+    }
+    Ok(match name {
+        "huawei" => Box::new(FixedTimeout::huawei()),
+        "latency-min" => Box::new(LatencyMin),
+        "carbon-min" => Box::new(CarbonMin),
+        "dpso" => Box::new(Dpso::new(DpsoConfig::default())),
+        "oracle" => Box::new(Oracle),
+        "lace-rl" => Box::new(workload::lace_rl_policy()?),
+        other => anyhow::bail!("unknown policy '{other}'"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let w = workload::build(seed_of(args), args.flag("quick"));
+    let name = args.str_or("policy", "lace-rl");
+    let lambda = args.f64_or("lambda", 0.5);
+    let trace = if args.flag("long-tailed") { &w.long_tailed } else { &w.general };
+    let mut policy = build_policy(name)?;
+    let m = workload::evaluate(trace, &w.ci, &w.energy, policy.as_mut(), lambda, name == "oracle");
+    println!("{}", m.summary_row(name));
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    experiments::run(id, seed_of(args), args.flag("quick"))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let w = workload::build(seed_of(args), args.flag("quick"));
+    let name = args.str_or("policy", "lace-rl");
+    let speedup = args.f64_or("speedup", 0.0);
+    let pace = if speedup > 0.0 { Pace::RealTime { speedup } } else { Pace::MaxSpeed };
+    let cfg = RouterConfig {
+        lambda_carbon: args.f64_or("lambda", 0.5),
+        ..RouterConfig::default()
+    };
+    // The server is generic over the policy type; route through the
+    // concrete types (trait objects are not Send+'static-friendly here).
+    let report = match name {
+        "huawei" => {
+            CoordinatorServer::run(&w.general, FixedTimeout::huawei(), w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
+        }
+        "latency-min" => {
+            CoordinatorServer::run(&w.general, LatencyMin, w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
+        }
+        "carbon-min" => {
+            CoordinatorServer::run(&w.general, CarbonMin, w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
+        }
+        "dpso" => {
+            CoordinatorServer::run(&w.general, Dpso::new(DpsoConfig::default()), w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
+        }
+        "lace-rl" => {
+            CoordinatorServer::run(&w.general, workload::lace_rl_policy()?, w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
+        }
+        other => anyhow::bail!("unknown policy '{other}' for serve"),
+    };
+    report.print(name);
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let artifacts = ArtifactSet::open(args.str_or("artifacts", &artifacts::default_dir()))?;
+    let runtime = PjrtRuntime::cpu()?;
+    println!("platform={} devices={}", runtime.platform(), runtime.device_count());
+    let params = artifacts.init_params()?;
+    let dims = artifacts.manifest.dims();
+
+    // PJRT Pallas-kernel path vs native Rust forward must agree.
+    let exe = runtime.load_hlo_text(artifacts.infer_path(1).to_str().unwrap())?;
+    let infer = QNetInfer::new(exe, 1, dims);
+    let state: Vec<f32> = (0..dims.0).map(|i| 0.1 * i as f32).collect();
+    let q_pjrt = infer.q_values(&params, &state)?;
+    let mut native = lace_rl::policy::native_mlp::NativeMlp::new(params.clone());
+    let q_native = native.forward(&state).to_vec();
+    let max_diff = q_pjrt
+        .iter()
+        .zip(q_native.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("pjrt (pallas)  q = {q_pjrt:?}");
+    println!("native (rust)  q = {q_native:?}");
+    println!("max |diff| = {max_diff:.3e}");
+    anyhow::ensure!(max_diff < 1e-4, "PJRT and native paths disagree");
+
+    // Train-step executable loads and runs one step.
+    let exe = runtime.load_hlo_text(artifacts.train_step_path().to_str().unwrap())?;
+    let step = lace_rl::runtime::TrainStep::new(exe, artifacts.manifest.train_batch, dims);
+    let b = artifacts.manifest.train_batch;
+    let m0 = lace_rl::rl::qnet::QNetParams::zeros(dims);
+    let out = step.step(
+        &params,
+        &params,
+        &m0,
+        &m0,
+        1.0,
+        &vec![0.1; b * dims.0],
+        &vec![0i32; b],
+        &vec![-1.0; b],
+        &vec![0.2; b * dims.0],
+        &vec![0.0; b],
+    )?;
+    println!("train step: loss = {:.6}", out.loss);
+    anyhow::ensure!(out.loss.is_finite(), "non-finite loss");
+    anyhow::ensure!(out.params.max_abs_diff(&params) > 0.0, "train step did not update params");
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Cross-policy comparison tables and normalized trade-off coordinates
+//! (Figs. 5–9 output formatting).
+
+use crate::simulator::metrics::SimMetrics;
+
+/// One policy's results in a comparison.
+#[derive(Debug, Clone)]
+pub struct PolicyResult {
+    pub name: String,
+    pub metrics: SimMetrics,
+}
+
+/// A multi-policy comparison over one workload.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    pub workload: String,
+    pub results: Vec<PolicyResult>,
+}
+
+impl Comparison {
+    pub fn new(workload: &str) -> Self {
+        Comparison { workload: workload.to_string(), results: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, metrics: SimMetrics) {
+        self.results.push(PolicyResult { name: name.to_string(), metrics });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&PolicyResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Normalized trade-off coordinates (Figs. 6/9): cold-start increase
+    /// relative to the minimum cold-start policy, and keep-alive-carbon
+    /// increase relative to the minimum-carbon policy. The ideal scheduler
+    /// sits at (1.0, 1.0) — the bottom-left corner.
+    pub fn tradeoff_coordinates(&self) -> Vec<(String, f64, f64)> {
+        let min_cold = self
+            .results
+            .iter()
+            .map(|r| r.metrics.cold_starts)
+            .min()
+            .unwrap_or(1)
+            .max(1) as f64;
+        let min_carbon = self
+            .results
+            .iter()
+            .map(|r| r.metrics.keepalive_carbon_g)
+            .fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        self.results
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    r.metrics.cold_starts as f64 / min_cold,
+                    r.metrics.keepalive_carbon_g / min_carbon,
+                )
+            })
+            .collect()
+    }
+
+    /// Paper-style comparison table (Figs. 5/7 or 8/9 numbers in one view).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16} {:>10} {:>12} {:>14} {:>12} {:>12} {:>14}\n",
+            "policy", "cold", "latency(s)", "keepalive(g)", "total(g)", "LCP", "IRI"
+        ));
+        for r in &self.results {
+            let m = &r.metrics;
+            out.push_str(&format!(
+                "{:<16} {:>10} {:>12.4} {:>14.4} {:>12.3} {:>12.2} {:>14.1}\n",
+                r.name,
+                m.cold_starts,
+                m.avg_latency_s(),
+                m.keepalive_carbon_g,
+                m.total_carbon_g(),
+                m.lcp(),
+                m.iri(),
+            ));
+        }
+        out
+    }
+
+    /// Best (lowest) LCP and IRI policy names (Figs. 7/9 claims).
+    pub fn best_lcp(&self) -> Option<&str> {
+        self.results
+            .iter()
+            .min_by(|a, b| a.metrics.lcp().partial_cmp(&b.metrics.lcp()).unwrap())
+            .map(|r| r.name.as_str())
+    }
+
+    pub fn best_iri(&self) -> Option<&str> {
+        self.results
+            .iter()
+            .min_by(|a, b| a.metrics.iri().partial_cmp(&b.metrics.iri()).unwrap())
+            .map(|r| r.name.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(cold: u64, lat: f64, ka: f64, exec: f64) -> SimMetrics {
+        let mut m = SimMetrics::new();
+        m.invocations = 100;
+        m.cold_starts = cold;
+        m.latency.add(lat);
+        m.keepalive_carbon_g = ka;
+        m.exec_carbon_g = exec;
+        m
+    }
+
+    fn sample() -> Comparison {
+        let mut c = Comparison::new("test");
+        c.add("latency-min", metrics(10, 1.0, 900.0, 70.0));
+        c.add("carbon-min", metrics(60, 1.8, 12.0, 70.0));
+        c.add("lace-rl", metrics(14, 1.05, 49.0, 70.0));
+        c
+    }
+
+    #[test]
+    fn tradeoff_normalizes_to_minimums() {
+        let c = sample();
+        let coords = c.tradeoff_coordinates();
+        let lm = coords.iter().find(|(n, _, _)| n == "latency-min").unwrap();
+        assert!((lm.1 - 1.0).abs() < 1e-12); // min cold
+        let cm = coords.iter().find(|(n, _, _)| n == "carbon-min").unwrap();
+        assert!((cm.2 - 1.0).abs() < 1e-12); // min carbon
+        let lr = coords.iter().find(|(n, _, _)| n == "lace-rl").unwrap();
+        assert!(lr.1 < 2.0 && lr.2 < 5.0); // near the corner
+    }
+
+    #[test]
+    fn best_composites() {
+        // lace-rl: LCP = 1.05·119 ≈ 125, IRI = 14·49 = 686 — both minima
+        // (carbon-min's 60 cold starts × 12 g = 720 loses IRI narrowly).
+        let c = sample();
+        assert_eq!(c.best_lcp(), Some("lace-rl"));
+        assert_eq!(c.best_iri(), Some("lace-rl"));
+    }
+
+    #[test]
+    fn table_contains_all_policies() {
+        let t = sample().table();
+        for n in ["latency-min", "carbon-min", "lace-rl"] {
+            assert!(t.contains(n));
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Carbon-Minimizing baseline (§IV-A5): strictly minimizes idle carbon by
+//! always choosing the shortest keep-alive, accepting the resulting cold
+//! starts (the paper's high-latency extreme in Figs. 5b/8b).
+
+use crate::policy::{DecisionContext, KeepAlivePolicy};
+
+#[derive(Debug, Clone, Default)]
+pub struct CarbonMin;
+
+impl KeepAlivePolicy for CarbonMin {
+    fn name(&self) -> &str {
+        "carbon-min"
+    }
+
+    fn decide(&mut self, _ctx: &DecisionContext) -> usize {
+        0 // shortest keep-alive in the action set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+    use crate::KEEP_ALIVE_ACTIONS;
+
+    #[test]
+    fn always_shortest() {
+        let f = profile(10.0);
+        let c = ctx(&f, 5.0, [1.0; 5], 0.0); // even when reuse is certain
+        assert_eq!(KEEP_ALIVE_ACTIONS[CarbonMin.decide(&c)], 1.0);
+    }
+}

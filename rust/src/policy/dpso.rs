@@ -1,0 +1,217 @@
+//! DPSO baseline — the EcoLife-style Particle Swarm Optimization
+//! metaheuristic (§IV-A5, [22]).
+//!
+//! EcoLife co-selects keep-alive durations with PSO per decision. We
+//! reproduce the decision procedure on our action space: a swarm explores
+//! the continuous keep-alive range [1, 60] s, fitness is the *expected*
+//! blended cost under the function's reuse-probability profile
+//! (piecewise-linear interpolation of p_k between the discrete grid
+//! points), and the converged global best is snapped to the nearest
+//! discrete action.
+//!
+//! The point of this baseline is twofold (paper §IV-E): decision *quality*
+//! — population heuristics rank close to LACE-RL on carbon but worse on
+//! cold starts — and decision *cost* — iterative population updates per
+//! decision are orders of magnitude slower than one DQN forward pass
+//! (4,600× in the paper). `benches/decision_latency.rs` measures ours.
+
+use crate::energy::JOULES_PER_KWH;
+use crate::policy::{blended_cost, DecisionContext, KeepAlivePolicy};
+use crate::util::rng::Rng;
+use crate::KEEP_ALIVE_ACTIONS;
+
+/// PSO hyper-parameters (standard constriction-style settings).
+#[derive(Debug, Clone)]
+pub struct DpsoConfig {
+    pub particles: usize,
+    pub iterations: usize,
+    pub inertia: f64,
+    pub c_personal: f64,
+    pub c_global: f64,
+    pub seed: u64,
+}
+
+impl Default for DpsoConfig {
+    fn default() -> Self {
+        DpsoConfig {
+            particles: 50,
+            iterations: 40,
+            inertia: 0.72,
+            c_personal: 1.49,
+            c_global: 1.49,
+            seed: 11,
+        }
+    }
+}
+
+pub struct Dpso {
+    cfg: DpsoConfig,
+    rng: Rng,
+    // Reused particle buffers (avoid per-decision allocation).
+    pos: Vec<f64>,
+    vel: Vec<f64>,
+    pbest: Vec<f64>,
+    pbest_cost: Vec<f64>,
+}
+
+impl Dpso {
+    pub fn new(cfg: DpsoConfig) -> Self {
+        let n = cfg.particles;
+        let rng = Rng::new(cfg.seed);
+        Dpso {
+            cfg,
+            rng,
+            pos: vec![0.0; n],
+            vel: vec![0.0; n],
+            pbest: vec![0.0; n],
+            pbest_cost: vec![f64::INFINITY; n],
+        }
+    }
+
+    /// Reuse probability at a continuous keep-alive `k`: piecewise-linear
+    /// interpolation of the discrete p_k grid, clamped at the ends.
+    fn reuse_prob_at(probs: &[f64; 5], k: f64) -> f64 {
+        let grid = &KEEP_ALIVE_ACTIONS;
+        if k <= grid[0] {
+            return probs[0];
+        }
+        for i in 1..grid.len() {
+            if k <= grid[i] {
+                let f = (k - grid[i - 1]) / (grid[i] - grid[i - 1]);
+                return probs[i - 1] + f * (probs[i] - probs[i - 1]);
+            }
+        }
+        probs[grid.len() - 1]
+    }
+
+    /// Expected blended cost of keep-alive `k` (the PSO fitness).
+    fn fitness(ctx: &DecisionContext, k: f64) -> f64 {
+        let p = Self::reuse_prob_at(&ctx.reuse_probs, k);
+        let cold = (1.0 - p) * ctx.func.cold_start_s;
+        // Expected idle span: reuse arrives uniformly within k (approx.
+        // k/2) with prob p, otherwise the full timeout burns.
+        let expected_idle = p * (k * 0.5) + (1.0 - p) * k;
+        let carbon = ctx.idle_power_w * expected_idle * ctx.ci / JOULES_PER_KWH;
+        blended_cost(ctx.lambda_carbon, cold, carbon)
+    }
+}
+
+impl KeepAlivePolicy for Dpso {
+    fn name(&self) -> &str {
+        "dpso-ecolife"
+    }
+
+    fn decide(&mut self, ctx: &DecisionContext) -> usize {
+        let lo = KEEP_ALIVE_ACTIONS[0];
+        let hi = KEEP_ALIVE_ACTIONS[KEEP_ALIVE_ACTIONS.len() - 1];
+        let n = self.cfg.particles;
+
+        let mut gbest = lo;
+        let mut gbest_cost = f64::INFINITY;
+
+        // Init swarm.
+        for i in 0..n {
+            self.pos[i] = self.rng.range(lo, hi);
+            self.vel[i] = self.rng.range(-(hi - lo) * 0.1, (hi - lo) * 0.1);
+            let c = Self::fitness(ctx, self.pos[i]);
+            self.pbest[i] = self.pos[i];
+            self.pbest_cost[i] = c;
+            if c < gbest_cost {
+                gbest_cost = c;
+                gbest = self.pos[i];
+            }
+        }
+
+        // Iterate.
+        for _ in 0..self.cfg.iterations {
+            for i in 0..n {
+                let r1 = self.rng.f64();
+                let r2 = self.rng.f64();
+                self.vel[i] = self.cfg.inertia * self.vel[i]
+                    + self.cfg.c_personal * r1 * (self.pbest[i] - self.pos[i])
+                    + self.cfg.c_global * r2 * (gbest - self.pos[i]);
+                self.pos[i] = (self.pos[i] + self.vel[i]).clamp(lo, hi);
+                let c = Self::fitness(ctx, self.pos[i]);
+                if c < self.pbest_cost[i] {
+                    self.pbest_cost[i] = c;
+                    self.pbest[i] = self.pos[i];
+                    if c < gbest_cost {
+                        gbest_cost = c;
+                        gbest = self.pos[i];
+                    }
+                }
+            }
+        }
+
+        // Snap to the nearest discrete action, breaking ties by cost.
+        let mut best_a = 0;
+        let mut best_d = f64::INFINITY;
+        for (a, &k) in KEEP_ALIVE_ACTIONS.iter().enumerate() {
+            let d = (k - gbest).abs();
+            if d < best_d {
+                best_d = d;
+                best_a = a;
+            }
+        }
+        best_a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+
+    fn decide(cold_s: f64, probs: [f64; 5], lambda: f64, ci: f64) -> usize {
+        let f = profile(cold_s);
+        let c = ctx(&f, ci, probs, lambda);
+        Dpso::new(DpsoConfig::default()).decide(&c)
+    }
+
+    #[test]
+    fn interpolation_matches_grid_points() {
+        let probs = [0.1, 0.3, 0.5, 0.8, 0.9];
+        for (i, &k) in KEEP_ALIVE_ACTIONS.iter().enumerate() {
+            assert!((Dpso::reuse_prob_at(&probs, k) - probs[i]).abs() < 1e-12);
+        }
+        // Midpoint between 10 and 30:
+        assert!((Dpso::reuse_prob_at(&probs, 20.0) - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_leaning_picks_long_keepalive() {
+        // Expensive cold start, λ→0 and most reuse arriving late.
+        let a = decide(10.0, [0.05, 0.1, 0.2, 0.6, 0.95], 0.05, 300.0);
+        assert!(KEEP_ALIVE_ACTIONS[a] >= 30.0, "got {}", KEEP_ALIVE_ACTIONS[a]);
+    }
+
+    #[test]
+    fn carbon_leaning_picks_short_keepalive() {
+        // Cheap cold start, λ→1, high CI.
+        let a = decide(0.05, [0.05, 0.1, 0.2, 0.6, 0.95], 0.98, 900.0);
+        assert!(KEEP_ALIVE_ACTIONS[a] <= 5.0, "got {}", KEEP_ALIVE_ACTIONS[a]);
+    }
+
+    #[test]
+    fn deterministic_per_construction() {
+        let f = profile(2.0);
+        let c = ctx(&f, 300.0, [0.1, 0.4, 0.6, 0.8, 0.9], 0.5);
+        let a1 = Dpso::new(DpsoConfig::default()).decide(&c);
+        let a2 = Dpso::new(DpsoConfig::default()).decide(&c);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn pso_close_to_exhaustive_grid() {
+        // PSO should not be much worse than brute-force over a fine grid.
+        let f = profile(3.0);
+        let c = ctx(&f, 500.0, [0.2, 0.35, 0.5, 0.75, 0.92], 0.5);
+        let a = Dpso::new(DpsoConfig::default()).decide(&c);
+        let pso_cost = Dpso::fitness(&c, KEEP_ALIVE_ACTIONS[a]);
+        let best_grid = KEEP_ALIVE_ACTIONS
+            .iter()
+            .map(|&k| Dpso::fitness(&c, k))
+            .fold(f64::INFINITY, f64::min);
+        assert!(pso_cost <= best_grid * 1.05 + 1e-9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Fixed-timeout policy — Huawei's production configuration (§IV-A5).
+
+use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::KEEP_ALIVE_ACTIONS;
+
+/// Always keeps pods alive for the same duration. `FixedTimeout::huawei()`
+/// is the 60 s state-of-the-practice baseline: *static* in the strong
+/// sense — the window is armed when the pod first idles and is **not**
+/// refreshed by subsequent reuse (no per-invocation adaptation at all; see
+/// `KeepAlivePolicy::refreshes_timer`). `FixedTimeout::new(k)` is the
+/// adaptive-refresh sweep variant used by Fig. 2.
+#[derive(Debug, Clone)]
+pub struct FixedTimeout {
+    action: usize,
+    name: String,
+    refresh: bool,
+}
+
+impl FixedTimeout {
+    /// Refreshing fixed timeout at the action closest to `timeout_s`
+    /// (the Fig. 2 sweep semantics: every completion re-arms the timer).
+    pub fn new(timeout_s: f64) -> Self {
+        let action = KEEP_ALIVE_ACTIONS
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                (*a - timeout_s)
+                    .abs()
+                    .partial_cmp(&(*b - timeout_s).abs())
+                    .unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        FixedTimeout {
+            action,
+            name: format!("fixed-{}s", KEEP_ALIVE_ACTIONS[action]),
+            refresh: true,
+        }
+    }
+
+    /// Huawei's static 60 s keep-alive: non-refreshing window.
+    pub fn huawei() -> Self {
+        FixedTimeout {
+            action: KEEP_ALIVE_ACTIONS.len() - 1,
+            name: "huawei-60s".to_string(),
+            refresh: false,
+        }
+    }
+
+    pub fn action(&self) -> usize {
+        self.action
+    }
+}
+
+impl KeepAlivePolicy for FixedTimeout {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn decide(&mut self, _ctx: &DecisionContext) -> usize {
+        self.action
+    }
+
+    fn refreshes_timer(&self) -> bool {
+        self.refresh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+
+    #[test]
+    fn huawei_is_60s() {
+        let mut p = FixedTimeout::huawei();
+        assert_eq!(KEEP_ALIVE_ACTIONS[p.action()], 60.0);
+        let f = profile(1.0);
+        let c = ctx(&f, 300.0, [0.5; 5], 0.5);
+        assert_eq!(p.decide(&c), 4);
+    }
+
+    #[test]
+    fn snaps_to_nearest_action() {
+        assert_eq!(KEEP_ALIVE_ACTIONS[FixedTimeout::new(7.0).action()], 5.0);
+        assert_eq!(KEEP_ALIVE_ACTIONS[FixedTimeout::new(8.0).action()], 10.0);
+        assert_eq!(KEEP_ALIVE_ACTIONS[FixedTimeout::new(0.0).action()], 1.0);
+        assert_eq!(KEEP_ALIVE_ACTIONS[FixedTimeout::new(1e9).action()], 60.0);
+    }
+}

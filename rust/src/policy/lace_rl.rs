@@ -1,0 +1,146 @@
+//! LACE-RL inference policy (§III): encode the decision context (Eq. 6),
+//! one Q-network forward pass, act greedily.
+//!
+//! The Q-function is pluggable behind [`QFunction`]:
+//! * [`crate::policy::native_mlp::NativeMlp`] — pure-Rust forward, the
+//!   ~µs fast path (perf-pass winner, see EXPERIMENTS.md §Perf);
+//! * [`crate::runtime::QNetInfer`]-backed [`PjrtQ`] — the canonical AOT
+//!   executable (Pallas fused-MLP kernel under PJRT).
+//!
+//! Both paths are asserted to agree in the integration tests.
+
+use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::rl::encoder::{encode, STATE_DIM};
+
+/// Minimal Q-function interface: state in, per-action Q-values out.
+pub trait QFunction {
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> [f32; 5];
+}
+
+impl QFunction for crate::policy::native_mlp::NativeMlp {
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> [f32; 5] {
+        let q = self.forward(state);
+        let mut out = [0.0f32; 5];
+        out.copy_from_slice(&q[..5]);
+        out
+    }
+}
+
+/// PJRT-backed Q-function using the batch-1 inference executable.
+pub struct PjrtQ {
+    infer: crate::runtime::QNetInfer,
+    params: crate::rl::qnet::QNetParams,
+}
+
+impl PjrtQ {
+    pub fn new(infer: crate::runtime::QNetInfer, params: crate::rl::qnet::QNetParams) -> Self {
+        assert_eq!(infer.batch, 1, "PjrtQ needs the batch-1 executable");
+        PjrtQ { infer, params }
+    }
+}
+
+impl QFunction for PjrtQ {
+    fn q_values(&mut self, state: &[f32; STATE_DIM]) -> [f32; 5] {
+        let q = self
+            .infer
+            .q_values(&self.params, state)
+            .expect("PJRT inference failed");
+        let mut out = [0.0f32; 5];
+        out.copy_from_slice(&q[..5]);
+        out
+    }
+}
+
+/// One recorded decision (for the Fig. 10b interpretability analysis).
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionRecord {
+    pub t: f64,
+    pub action: usize,
+    pub ci: f64,
+}
+
+/// The LACE-RL policy: greedy over the learned Q-function.
+pub struct LaceRlPolicy<Q: QFunction> {
+    q: Q,
+    name: String,
+    /// When set, every decision is recorded (Fig. 10b).
+    pub record: bool,
+    pub decisions: Vec<DecisionRecord>,
+}
+
+impl<Q: QFunction> LaceRlPolicy<Q> {
+    pub fn new(q: Q) -> Self {
+        LaceRlPolicy {
+            q,
+            name: "lace-rl".to_string(),
+            record: false,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn recording(mut self) -> Self {
+        self.record = true;
+        self
+    }
+
+    pub fn q_mut(&mut self) -> &mut Q {
+        &mut self.q
+    }
+}
+
+impl<Q: QFunction> KeepAlivePolicy for LaceRlPolicy<Q> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn decide(&mut self, ctx: &DecisionContext) -> usize {
+        let state = encode(ctx);
+        let q = self.q.q_values(&state);
+        let mut best = 0;
+        let mut best_v = q[0];
+        for (i, &v) in q.iter().enumerate().skip(1) {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        if self.record {
+            self.decisions.push(DecisionRecord { t: ctx.t, action: best, ci: ctx.ci });
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+
+    /// Q-function with a fixed preference, independent of state.
+    struct ConstQ([f32; 5]);
+    impl QFunction for ConstQ {
+        fn q_values(&mut self, _s: &[f32; STATE_DIM]) -> [f32; 5] {
+            self.0
+        }
+    }
+
+    #[test]
+    fn greedy_argmax() {
+        let f = profile(1.0);
+        let c = ctx(&f, 300.0, [0.5; 5], 0.5);
+        let mut p = LaceRlPolicy::new(ConstQ([0.0, 3.0, 1.0, 2.0, -1.0]));
+        assert_eq!(p.decide(&c), 1);
+    }
+
+    #[test]
+    fn recording_captures_decisions() {
+        let f = profile(1.0);
+        let c = ctx(&f, 420.0, [0.5; 5], 0.5);
+        let mut p = LaceRlPolicy::new(ConstQ([1.0, 0.0, 0.0, 0.0, 0.0])).recording();
+        p.decide(&c);
+        p.decide(&c);
+        assert_eq!(p.decisions.len(), 2);
+        assert_eq!(p.decisions[0].action, 0);
+        assert_eq!(p.decisions[0].ci, 420.0);
+    }
+}

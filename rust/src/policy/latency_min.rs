@@ -1,0 +1,63 @@
+//! Latency-Minimizing baseline (§IV-A5): minimizes expected cold starts
+//! regardless of energy cost. Since reuse probability is monotone in the
+//! keep-alive duration, the expected cold cost (1 − p_k)·L_cold is
+//! minimized by the longest timeout — the greedy over-provisioner the
+//! paper shows exploding keep-alive carbon (Fig. 5c).
+
+use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::KEEP_ALIVE_ACTIONS;
+
+/// Pre-warm horizon (s): Latency-Min retains pods an order of magnitude
+/// beyond the action set's 60 s cap, the "indiscriminately prolonging
+/// keep-alive durations" extreme of Fig. 5 whose keep-alive carbon dwarfs
+/// every bounded policy.
+pub const PREWARM_HORIZON_S: f64 = 600.0;
+
+#[derive(Debug, Clone, Default)]
+pub struct LatencyMin;
+
+impl KeepAlivePolicy for LatencyMin {
+    fn name(&self) -> &str {
+        "latency-min"
+    }
+
+    fn decide(&mut self, ctx: &DecisionContext) -> usize {
+        // argmin_k (1-p_k)·L_cold; ties broken toward the longest k
+        // (monotone p_k makes this the last action in practice).
+        let mut best = KEEP_ALIVE_ACTIONS.len() - 1;
+        let mut best_cost = f64::INFINITY;
+        for a in (0..KEEP_ALIVE_ACTIONS.len()).rev() {
+            let cost = ctx.expected_cold_cost(a);
+            if cost < best_cost {
+                best_cost = cost;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn decide_seconds(&mut self, ctx: &DecisionContext) -> (usize, f64) {
+        (self.decide(ctx), PREWARM_HORIZON_S)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+
+    #[test]
+    fn picks_longest_under_monotone_probs() {
+        let f = profile(2.0);
+        let c = ctx(&f, 300.0, [0.1, 0.3, 0.5, 0.8, 0.95], 0.9);
+        assert_eq!(LatencyMin.decide(&c), 4);
+    }
+
+    #[test]
+    fn ignores_lambda_and_ci() {
+        let f = profile(2.0);
+        let lo = ctx(&f, 10.0, [0.2; 5], 0.0);
+        let hi = ctx(&f, 900.0, [0.2; 5], 1.0);
+        assert_eq!(LatencyMin.decide(&lo), LatencyMin.decide(&hi));
+    }
+}

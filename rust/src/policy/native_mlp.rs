@@ -1,0 +1,170 @@
+//! Pure-Rust Q-network forward pass — the perf-pass fast path.
+//!
+//! Runs the same 3-layer MLP as the AOT `dqn_infer` artifact, on weights
+//! exported after training ([`crate::rl::weights`]). Used where a single
+//! decision must cost ~1 µs (the paper's 15 µs/invocation claim, §IV-E);
+//! agreement with the PJRT executable is asserted to 1e-5 in the
+//! integration tests.
+
+use crate::rl::qnet::QNetParams;
+
+/// f32 MLP: input `d_in` → relu(h1) → relu(h2) → `d_out`.
+#[derive(Debug, Clone)]
+pub struct NativeMlp {
+    params: QNetParams,
+    // Scratch buffers: no allocation on the per-decision hot path.
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn new(params: QNetParams) -> Self {
+        let h1 = vec![0.0; params.hidden1()];
+        let h2 = vec![0.0; params.hidden2()];
+        let out = vec![0.0; params.n_actions()];
+        NativeMlp { params, h1, h2, out }
+    }
+
+    pub fn params(&self) -> &QNetParams {
+        &self.params
+    }
+
+    /// Forward pass; returns the Q-value slice (valid until next call).
+    pub fn forward(&mut self, state: &[f32]) -> &[f32] {
+        let p = &self.params;
+        debug_assert_eq!(state.len(), p.state_dim());
+        linear_relu(state, &p.w1, &p.b1, &mut self.h1);
+        linear_relu(&self.h1, &p.w2, &p.b2, &mut self.h2);
+        linear(&self.h2, &p.w3, &p.b3, &mut self.out);
+        &self.out
+    }
+
+    /// Greedy action (argmax over Q).
+    pub fn argmax(&mut self, state: &[f32]) -> usize {
+        let q = self.forward(state);
+        let mut best = 0;
+        let mut best_v = q[0];
+        for (i, &v) in q.iter().enumerate().skip(1) {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// y = relu(x @ W + b); W is row-major [in, out].
+#[inline]
+fn linear_relu(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
+    linear(x, w, b, y);
+    for v in y.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// y = x @ W + b. Accumulates row-wise so the inner loop streams W
+/// sequentially (cache-friendly for row-major weights).
+#[inline]
+fn linear(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
+    let n_out = y.len();
+    debug_assert_eq!(w.len(), x.len() * n_out);
+    y.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // ReLU sparsity: skip zeroed activations
+        }
+        let row = &w[i * n_out..(i + 1) * n_out];
+        for (yj, &wij) in y.iter_mut().zip(row.iter()) {
+            *yj += xi * wij;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::qnet::QNetParams;
+
+    /// 2 -> 2 -> 2 -> 2 identity-ish network for hand-checkable numbers.
+    fn tiny() -> QNetParams {
+        QNetParams {
+            dims: (2, 2, 2, 2),
+            w1: vec![1.0, 0.0, 0.0, 1.0],
+            b1: vec![0.0, 0.0],
+            w2: vec![1.0, 0.0, 0.0, 1.0],
+            b2: vec![0.0, 0.0],
+            w3: vec![1.0, 0.0, 0.0, 1.0],
+            b3: vec![0.5, -0.5],
+        }
+    }
+
+    #[test]
+    fn identity_network_passes_through() {
+        let mut mlp = NativeMlp::new(tiny());
+        let q = mlp.forward(&[2.0, 3.0]);
+        assert_eq!(q, &[2.5, 2.5]);
+    }
+
+    #[test]
+    fn relu_clips_negatives() {
+        let mut p = tiny();
+        p.b1 = vec![-10.0, 0.0]; // first hidden unit always clipped
+        let mut mlp = NativeMlp::new(p);
+        let q = mlp.forward(&[2.0, 3.0]);
+        assert_eq!(q, &[0.5, 2.5]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        let mut mlp = NativeMlp::new(tiny());
+        assert_eq!(mlp.argmax(&[1.0, 5.0]), 1);
+        assert_eq!(mlp.argmax(&[5.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn matches_manual_matmul_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let (d_in, h1, h2, d_out) = (10, 64, 64, 5);
+        let mk = |n: usize, rng: &mut Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.normal(0.0, 0.3) as f32).collect()
+        };
+        let p = QNetParams {
+            dims: (d_in, h1, h2, d_out),
+            w1: mk(d_in * h1, &mut rng),
+            b1: mk(h1, &mut rng),
+            w2: mk(h1 * h2, &mut rng),
+            b2: mk(h2, &mut rng),
+            w3: mk(h2 * d_out, &mut rng),
+            b3: mk(d_out, &mut rng),
+        };
+        let x: Vec<f32> = (0..d_in).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+
+        // Reference: straightforward f64 matmul.
+        let dense = |x: &[f64], w: &[f32], b: &[f32], n_out: usize, relu: bool| {
+            let mut y = vec![0.0f64; n_out];
+            for j in 0..n_out {
+                let mut acc = b[j] as f64;
+                for (i, &xi) in x.iter().enumerate() {
+                    acc += xi * w[i * n_out + j] as f64;
+                }
+                y[j] = if relu { acc.max(0.0) } else { acc };
+            }
+            y
+        };
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let r1 = dense(&x64, &p.w1, &p.b1, h1, true);
+        let r2 = dense(&r1, &p.w2, &p.b2, h2, true);
+        let want = dense(&r2, &p.w3, &p.b3, d_out, false);
+
+        let mut mlp = NativeMlp::new(p);
+        let got = mlp.forward(&x);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((*g as f64 - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+}

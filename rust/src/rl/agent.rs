@@ -1,0 +1,282 @@
+//! ε-greedy training agent: a [`KeepAlivePolicy`] that explores, harvests
+//! realized outcomes from the simulator and assembles MDP transitions.
+//!
+//! Transition chaining (§III-C): each decision for function *f* becomes a
+//! transition whose `next_state` is the state at *f*'s next decision — the
+//! per-function MDP the paper formulates. The simulator guarantees
+//! `observe(outcome)` for a decision fires before the same function's next
+//! `decide`, so the agent:
+//!
+//! 1. on `decide`: completes every *resolved* pending transition of this
+//!    function using the fresh state as `next_state`, then records the new
+//!    (state, action) as pending;
+//! 2. on `observe`: attaches the realized reward
+//!    `R = −[(1−λ)·cold_penalty + λ·κ·idle_carbon] · scale` to the matching
+//!    pending entry; `done` outcomes complete immediately with a zeroed
+//!    terminal state.
+
+use std::collections::HashMap;
+
+use crate::policy::native_mlp::NativeMlp;
+use crate::policy::{blended_cost, DecisionContext, KeepAlivePolicy, Outcome};
+use crate::rl::encoder::{encode, STATE_DIM};
+use crate::rl::replay::Transition;
+use crate::util::rng::Rng;
+
+/// Rewards are scaled down so early TD targets stay in the Huber-quadratic
+/// regime (|R| ≲ a few units).
+pub const REWARD_SCALE: f64 = 0.1;
+
+#[derive(Debug, Clone, Copy)]
+struct PendingT {
+    state: [f32; STATE_DIM],
+    action: u8,
+    decision_t: f64,
+    reward: Option<f32>,
+}
+
+/// The exploring agent. Owns the current online network copy for greedy
+/// actions; exploration is ε-uniform.
+pub struct EpsilonGreedyAgent {
+    mlp: NativeMlp,
+    pub epsilon: f64,
+    rng: Rng,
+    pending: HashMap<u32, Vec<PendingT>>,
+    /// Completed transitions, drained by the trainer after each episode.
+    pub transitions: Vec<Transition>,
+    /// Episode reward accumulator (diagnostics).
+    pub episode_reward: f64,
+    pub decisions: u64,
+    /// λ seen at the last decide() — outcomes lack the weight, contexts
+    /// carry it. Defaults to 0.5 until the first decision.
+    last_lambda: f64,
+}
+
+impl EpsilonGreedyAgent {
+    pub fn new(mlp: NativeMlp, epsilon: f64, seed: u64) -> Self {
+        EpsilonGreedyAgent {
+            mlp,
+            epsilon,
+            rng: Rng::new(seed),
+            pending: HashMap::new(),
+            transitions: Vec::new(),
+            episode_reward: 0.0,
+            decisions: 0,
+            last_lambda: 0.5,
+        }
+    }
+
+    /// Swap in fresh online weights (between episodes).
+    pub fn set_mlp(&mut self, mlp: NativeMlp) {
+        self.mlp = mlp;
+    }
+
+    /// Drain harvested transitions.
+    pub fn take_transitions(&mut self) -> Vec<Transition> {
+        std::mem::take(&mut self.transitions)
+    }
+
+    /// Drop unresolved pendings and reset per-episode counters.
+    pub fn reset_episode(&mut self) {
+        self.pending.clear();
+        self.episode_reward = 0.0;
+        self.decisions = 0;
+    }
+
+    fn reward_of(outcome: &Outcome, lambda: f64) -> f32 {
+        (-blended_cost(lambda, outcome.cold_penalty_s, outcome.idle_carbon_g)
+            * REWARD_SCALE) as f32
+    }
+
+    /// λ used for reward shaping — the simulator's configured λ is also in
+    /// the state vector, so the agent reads it from the context at decide
+    /// time and caches it here for observe time.
+    fn lambda(&self) -> f64 {
+        self.last_lambda
+    }
+}
+
+impl KeepAlivePolicy for EpsilonGreedyAgent {
+    fn name(&self) -> &str {
+        "epsilon-greedy-agent"
+    }
+
+    fn decide(&mut self, ctx: &DecisionContext) -> usize {
+        self.last_lambda = ctx.lambda_carbon;
+        let state = encode(ctx);
+
+        // Complete resolved pendings of this function: their next_state is
+        // exactly this state.
+        if let Some(list) = self.pending.get_mut(&ctx.func.id) {
+            let mut i = 0;
+            while i < list.len() {
+                if let Some(reward) = list[i].reward {
+                    let p = list.swap_remove(i);
+                    self.transitions.push(Transition {
+                        state: p.state,
+                        action: p.action,
+                        reward,
+                        next_state: state,
+                        done: false,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // ε-greedy action.
+        let action = if self.rng.chance(self.epsilon) {
+            self.rng.index(5)
+        } else {
+            self.mlp.argmax(&state)
+        };
+        self.decisions += 1;
+
+        self.pending.entry(ctx.func.id).or_default().push(PendingT {
+            state,
+            action: action as u8,
+            decision_t: ctx.t,
+            reward: None,
+        });
+        action
+    }
+
+    fn observe(&mut self, outcome: &Outcome) {
+        let reward = Self::reward_of(outcome, self.lambda());
+        self.episode_reward += reward as f64;
+        let Some(list) = self.pending.get_mut(&outcome.func) else {
+            return;
+        };
+        let Some(idx) = list
+            .iter()
+            .position(|p| p.decision_t == outcome.t && p.action as usize == outcome.action)
+        else {
+            return;
+        };
+        if outcome.done {
+            let p = list.swap_remove(idx);
+            self.transitions.push(Transition {
+                state: p.state,
+                action: p.action,
+                reward,
+                next_state: [0.0; STATE_DIM],
+                done: true,
+            });
+        } else {
+            list[idx].reward = Some(reward);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+    use crate::rl::qnet::QNetParams;
+
+    fn agent(epsilon: f64) -> EpsilonGreedyAgent {
+        let p = QNetParams::zeros((STATE_DIM, 8, 8, 5));
+        EpsilonGreedyAgent::new(NativeMlp::new(p), epsilon, 42)
+    }
+
+    fn outcome(func: u32, t: f64, action: usize, done: bool) -> Outcome {
+        Outcome {
+            func,
+            action,
+            t,
+            resolved_t: t + 1.0,
+            reused: false,
+            idle_span_s: 1.0,
+            idle_carbon_g: 0.001,
+            cold_penalty_s: 2.0,
+            done,
+        }
+    }
+
+    #[test]
+    fn chains_transition_to_next_decide() {
+        let f = profile(2.0);
+        let mut a = agent(0.0);
+        let c1 = {
+            let mut c = ctx(&f, 300.0, [0.1; 5], 0.5);
+            c.t = 10.0;
+            c
+        };
+        let act = a.decide(&c1);
+        a.observe(&outcome(0, 10.0, act, false));
+        assert!(a.transitions.is_empty()); // awaits next state
+        let c2 = {
+            let mut c = ctx(&f, 300.0, [0.9; 5], 0.5);
+            c.t = 20.0;
+            c
+        };
+        a.decide(&c2);
+        assert_eq!(a.transitions.len(), 1);
+        let t = &a.transitions[0];
+        assert!(!t.done);
+        assert!((t.next_state[0] - 0.9).abs() < 1e-6); // state at second decide
+        // reward = -[(0.5·2.0) + 0.5·κ·0.001] · 0.1 with κ = CARBON_COST_SCALE
+        let want = -(0.5 * 2.0 + 0.5 * crate::policy::CARBON_COST_SCALE * 0.001) * 0.1;
+        assert!((t.reward as f64 - want).abs() < 1e-6, "r={} want={want}", t.reward);
+    }
+
+    #[test]
+    fn done_outcome_completes_immediately() {
+        let f = profile(2.0);
+        let mut a = agent(0.0);
+        let mut c = ctx(&f, 300.0, [0.1; 5], 0.5);
+        c.t = 5.0;
+        let act = a.decide(&c);
+        a.observe(&outcome(0, 5.0, act, true));
+        assert_eq!(a.transitions.len(), 1);
+        assert!(a.transitions[0].done);
+        assert_eq!(a.transitions[0].next_state, [0.0; STATE_DIM]);
+    }
+
+    #[test]
+    fn epsilon_one_explores_uniformly() {
+        let f = profile(2.0);
+        let mut a = agent(1.0);
+        let mut seen = [0usize; 5];
+        for i in 0..500 {
+            let mut c = ctx(&f, 300.0, [0.1; 5], 0.5);
+            c.t = i as f64;
+            seen[a.decide(&c)] += 1;
+        }
+        for s in seen {
+            assert!(s > 50, "{seen:?}");
+        }
+    }
+
+    #[test]
+    fn epsilon_zero_is_greedy_deterministic() {
+        let f = profile(2.0);
+        let mut a = agent(0.0);
+        let c = ctx(&f, 300.0, [0.1; 5], 0.5);
+        let first = a.decide(&c);
+        for _ in 0..10 {
+            assert_eq!(a.decide(&c), first);
+        }
+    }
+
+    #[test]
+    fn unmatched_outcome_ignored() {
+        let mut a = agent(0.0);
+        a.observe(&outcome(99, 1.0, 0, false));
+        assert!(a.transitions.is_empty());
+    }
+
+    #[test]
+    fn reset_drops_pendings() {
+        let f = profile(2.0);
+        let mut a = agent(0.0);
+        let c = ctx(&f, 300.0, [0.1; 5], 0.5);
+        a.decide(&c);
+        a.reset_episode();
+        assert_eq!(a.decisions, 0);
+        // Outcome for the dropped pending is ignored.
+        a.observe(&outcome(0, 0.0, 0, false));
+        assert!(a.transitions.is_empty());
+    }
+}

@@ -1,0 +1,92 @@
+//! State encoder (paper Eq. 6 / §III-A).
+//!
+//! Maps a [`DecisionContext`] to the 10-dim feature vector the DQN
+//! consumes: `[p_k1..p_k5, mem, cpu, L_cold, CI, λ_carbon]`.
+//!
+//! Normalization is *fixed and deterministic* (no training-set statistics
+//! to ship): long-tailed features (memory, cold-start latency) are
+//! log-compressed as the paper prescribes, bounded features are scaled to
+//! [0, 1]. The same function runs at train and inference time on both the
+//! Rust native path and in the values fed to the PJRT executables, so
+//! train/serve skew is structurally impossible.
+
+use crate::policy::DecisionContext;
+
+/// Input dimensionality — must equal model.py's STATE_DIM.
+pub const STATE_DIM: usize = 10;
+
+/// Normalization caps (values clamp at 1.0 beyond these).
+pub const MEM_CAP_MB: f64 = 4096.0;
+pub const CPU_CAP_CORES: f64 = 4.0;
+pub const COLD_CAP_S: f64 = 20.0;
+pub const CI_CAP: f64 = 1000.0;
+
+/// Encode a decision context into the DQN state vector.
+#[inline]
+pub fn encode(ctx: &DecisionContext) -> [f32; STATE_DIM] {
+    let mut s = [0.0f32; STATE_DIM];
+    for i in 0..5 {
+        s[i] = ctx.reuse_probs[i] as f32;
+    }
+    s[5] = log_norm(ctx.func.mem_mb, MEM_CAP_MB);
+    s[6] = (ctx.func.cpu_cores / CPU_CAP_CORES).clamp(0.0, 1.0) as f32;
+    s[7] = log_norm(ctx.func.cold_start_s, COLD_CAP_S);
+    s[8] = (ctx.ci / CI_CAP).clamp(0.0, 1.0) as f32;
+    s[9] = ctx.lambda_carbon as f32;
+    s
+}
+
+/// ln(1+x)/ln(1+cap), clamped to [0, 1] — the paper's log-normalization
+/// for long-tailed features.
+#[inline]
+fn log_norm(x: f64, cap: f64) -> f32 {
+    ((1.0 + x.max(0.0)).ln() / (1.0 + cap).ln()).clamp(0.0, 1.0) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::test_util::{ctx, profile};
+
+    #[test]
+    fn layout_matches_eq6() {
+        let f = profile(2.0);
+        let c = ctx(&f, 500.0, [0.1, 0.2, 0.3, 0.4, 0.5], 0.7);
+        let s = encode(&c);
+        assert_eq!(&s[0..5], &[0.1, 0.2, 0.3, 0.4, 0.5]);
+        assert!((s[8] - 0.5).abs() < 1e-6); // CI 500/1000
+        assert!((s[9] - 0.7).abs() < 1e-6); // lambda
+    }
+
+    #[test]
+    fn all_features_bounded() {
+        let mut f = profile(1e9);
+        f.mem_mb = 1e9;
+        f.cpu_cores = 1e9;
+        let c = ctx(&f, 1e9, [1.0; 5], 1.0);
+        let s = encode(&c);
+        for v in s {
+            assert!((0.0..=1.0).contains(&v), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn log_norm_is_monotone_and_compresses() {
+        let a = log_norm(0.1, 20.0);
+        let b = log_norm(1.0, 20.0);
+        let c = log_norm(10.0, 20.0);
+        assert!(a < b && b < c && c < 1.0);
+        // Compression: 10x input gives much less than 10x feature.
+        assert!(c / b < 5.0);
+    }
+
+    #[test]
+    fn zero_inputs_zero_features() {
+        let mut f = profile(0.0);
+        f.mem_mb = 0.0;
+        f.cpu_cores = 0.0;
+        let c = ctx(&f, 0.0, [0.0; 5], 0.0);
+        let s = encode(&c);
+        assert!(s.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! The LACE-RL learning stack (paper §III).
+//!
+//! Everything RL lives here: the state encoder (Eq. 6), the replay buffer,
+//! the ε-greedy training policy that harvests transitions from simulator
+//! feedback, the Rust-side DQN trainer that drives the AOT-compiled
+//! `dqn_train_step` executable via PJRT, and weight serialization shared
+//! with the Python build path.
+
+pub mod agent;
+pub mod encoder;
+pub mod qnet;
+pub mod replay;
+pub mod trainer;
+pub mod weights;
+
+pub use encoder::{encode, STATE_DIM};
+pub use qnet::QNetParams;
+pub use replay::{ReplayBuffer, Transition};

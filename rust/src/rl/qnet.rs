@@ -1,0 +1,189 @@
+//! Q-network parameter container shared by the native forward pass, the
+//! PJRT executables, and weight serialization.
+//!
+//! Layout mirrors `python/compile/model.py` (`PARAM_KEYS` order, row-major
+//! f32); the two sides must change in lockstep.
+
+/// Parameter-tensor order, identical to model.py's `PARAM_KEYS`.
+pub const PARAM_KEYS: [&str; 6] = ["w1", "b1", "w2", "b2", "w3", "b3"];
+
+/// The 3-layer MLP parameters. `dims = (state_dim, h1, h2, n_actions)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QNetParams {
+    pub dims: (usize, usize, usize, usize),
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub b3: Vec<f32>,
+}
+
+impl QNetParams {
+    pub fn state_dim(&self) -> usize {
+        self.dims.0
+    }
+    pub fn hidden1(&self) -> usize {
+        self.dims.1
+    }
+    pub fn hidden2(&self) -> usize {
+        self.dims.2
+    }
+    pub fn n_actions(&self) -> usize {
+        self.dims.3
+    }
+
+    /// All-zero parameters with the given dims (Adam moment init).
+    pub fn zeros(dims: (usize, usize, usize, usize)) -> Self {
+        let (d, h1, h2, a) = dims;
+        QNetParams {
+            dims,
+            w1: vec![0.0; d * h1],
+            b1: vec![0.0; h1],
+            w2: vec![0.0; h1 * h2],
+            b2: vec![0.0; h2],
+            w3: vec![0.0; h2 * a],
+            b3: vec![0.0; a],
+        }
+    }
+
+    /// Tensors in PARAM_KEYS order with their shapes.
+    pub fn tensors(&self) -> [(&'static str, Vec<usize>, &Vec<f32>); 6] {
+        let (d, h1, h2, a) = self.dims;
+        [
+            ("w1", vec![d, h1], &self.w1),
+            ("b1", vec![h1], &self.b1),
+            ("w2", vec![h1, h2], &self.w2),
+            ("b2", vec![h2], &self.b2),
+            ("w3", vec![h2, a], &self.w3),
+            ("b3", vec![a], &self.b3),
+        ]
+    }
+
+    /// Mutable tensor data in PARAM_KEYS order.
+    pub fn tensors_mut(&mut self) -> [&mut Vec<f32>; 6] {
+        [
+            &mut self.w1,
+            &mut self.b1,
+            &mut self.w2,
+            &mut self.b2,
+            &mut self.w3,
+            &mut self.b3,
+        ]
+    }
+
+    /// Build from named tensors (weight-file or PJRT output order agnostic).
+    pub fn from_named(named: &[(String, Vec<usize>, Vec<f32>)]) -> anyhow::Result<Self> {
+        let find = |key: &str| -> anyhow::Result<(&Vec<usize>, &Vec<f32>)> {
+            named
+                .iter()
+                .find(|(n, _, _)| n == key)
+                .map(|(_, s, d)| (s, d))
+                .ok_or_else(|| anyhow::anyhow!("missing tensor '{key}'"))
+        };
+        let (s1, w1) = find("w1")?;
+        let (_, b1) = find("b1")?;
+        let (s2, w2) = find("w2")?;
+        let (_, b2) = find("b2")?;
+        let (s3, w3) = find("w3")?;
+        let (sb3, b3) = find("b3")?;
+        anyhow::ensure!(s1.len() == 2 && s2.len() == 2 && s3.len() == 2, "weights must be 2-D");
+        let dims = (s1[0], s1[1], s2[1], s3[1]);
+        anyhow::ensure!(s2[0] == dims.1, "w2 input dim mismatch");
+        anyhow::ensure!(s3[0] == dims.2, "w3 input dim mismatch");
+        anyhow::ensure!(sb3 == &vec![dims.3], "b3 shape mismatch");
+        let p = QNetParams {
+            dims,
+            w1: w1.clone(),
+            b1: b1.clone(),
+            w2: w2.clone(),
+            b2: b2.clone(),
+            w3: w3.clone(),
+            b3: b3.clone(),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Check internal consistency of vector lengths vs dims.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (d, h1, h2, a) = self.dims;
+        anyhow::ensure!(self.w1.len() == d * h1, "w1 size");
+        anyhow::ensure!(self.b1.len() == h1, "b1 size");
+        anyhow::ensure!(self.w2.len() == h1 * h2, "w2 size");
+        anyhow::ensure!(self.b2.len() == h2, "b2 size");
+        anyhow::ensure!(self.w3.len() == h2 * a, "w3 size");
+        anyhow::ensure!(self.b3.len() == a, "b3 size");
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.w1.len()
+            + self.b1.len()
+            + self.w2.len()
+            + self.b2.len()
+            + self.w3.len()
+            + self.b3.len()
+    }
+
+    /// Max |a - b| across all tensors (convergence / agreement checks).
+    pub fn max_abs_diff(&self, other: &QNetParams) -> f32 {
+        let mut m = 0.0f32;
+        for (a, b) in self
+            .tensors()
+            .iter()
+            .zip(other.tensors().iter())
+            .flat_map(|((_, _, xa), (_, _, xb))| xa.iter().zip(xb.iter()))
+        {
+            m = m.max((a - b).abs());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shapes() {
+        let p = QNetParams::zeros((10, 64, 64, 5));
+        p.validate().unwrap();
+        assert_eq!(p.n_params(), 10 * 64 + 64 + 64 * 64 + 64 + 64 * 5 + 5);
+    }
+
+    #[test]
+    fn from_named_any_order() {
+        let p = QNetParams::zeros((3, 4, 4, 2));
+        let mut named: Vec<(String, Vec<usize>, Vec<f32>)> = p
+            .tensors()
+            .iter()
+            .map(|(n, s, d)| (n.to_string(), s.clone(), (*d).clone()))
+            .collect();
+        named.reverse();
+        let q = QNetParams::from_named(&named).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_named_missing_tensor() {
+        let p = QNetParams::zeros((3, 4, 4, 2));
+        let named: Vec<(String, Vec<usize>, Vec<f32>)> = p
+            .tensors()
+            .iter()
+            .take(5)
+            .map(|(n, s, d)| (n.to_string(), s.clone(), (*d).clone()))
+            .collect();
+        assert!(QNetParams::from_named(&named).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = QNetParams::zeros((2, 2, 2, 2));
+        let mut b = a.clone();
+        b.w2[3] = -0.25;
+        assert_eq!(a.max_abs_diff(&b), 0.25);
+        assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Experience replay buffer (paper §III-C / §IV-A4: capacity 10,000,
+//! uniform sampling, batch 64).
+//!
+//! Stores transitions in fixed arrays and fills caller-provided flat
+//! buffers for the PJRT train step — no allocation per sample.
+
+use crate::rl::encoder::STATE_DIM;
+use crate::util::rng::Rng;
+
+/// One (s, a, r, s′, done) transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    pub state: [f32; STATE_DIM],
+    pub action: u8,
+    pub reward: f32,
+    pub next_state: [f32; STATE_DIM],
+    pub done: bool,
+}
+
+/// Ring-buffer replay memory with uniform sampling.
+#[derive(Debug, Clone)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+    /// Total pushes ever (monotone; len() = min(pushes, capacity)).
+    pushes: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, head: 0, pushes: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.pushes += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    /// Sample `batch` transitions uniformly (with replacement) into flat
+    /// arrays shaped for the `dqn_train_step` executable inputs.
+    ///
+    /// `states`/`next_states`: `[batch * STATE_DIM]` row-major;
+    /// `actions`: i32 indices; `rewards`, `dones`: f32.
+    pub fn sample_into(
+        &self,
+        rng: &mut Rng,
+        batch: usize,
+        states: &mut [f32],
+        actions: &mut [i32],
+        rewards: &mut [f32],
+        next_states: &mut [f32],
+        dones: &mut [f32],
+    ) {
+        assert!(!self.buf.is_empty(), "sampling from empty replay buffer");
+        assert_eq!(states.len(), batch * STATE_DIM);
+        assert_eq!(next_states.len(), batch * STATE_DIM);
+        assert_eq!(actions.len(), batch);
+        for b in 0..batch {
+            let t = &self.buf[rng.index(self.buf.len())];
+            states[b * STATE_DIM..(b + 1) * STATE_DIM].copy_from_slice(&t.state);
+            next_states[b * STATE_DIM..(b + 1) * STATE_DIM]
+                .copy_from_slice(&t.next_state);
+            actions[b] = t.action as i32;
+            rewards[b] = t.reward;
+            dones[b] = if t.done { 1.0 } else { 0.0 };
+        }
+    }
+
+    /// Iterate stored transitions (diagnostics / tests).
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        self.buf.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition {
+            state: [v; STATE_DIM],
+            action: (v as usize % 5) as u8,
+            reward: -v,
+            next_state: [v + 1.0; STATE_DIM],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.pushes(), 5);
+        let stored: Vec<f32> = rb.iter().map(|x| x.state[0]).collect();
+        // 0 and 1 evicted.
+        assert!(stored.contains(&2.0) && stored.contains(&3.0) && stored.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_fills_flat_arrays() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..10 {
+            rb.push(t(i as f32));
+        }
+        let batch = 4;
+        let mut s = vec![0.0; batch * STATE_DIM];
+        let mut a = vec![0i32; batch];
+        let mut r = vec![0.0f32; batch];
+        let mut ns = vec![0.0; batch * STATE_DIM];
+        let mut d = vec![0.0f32; batch];
+        let mut rng = Rng::new(1);
+        rb.sample_into(&mut rng, batch, &mut s, &mut a, &mut r, &mut ns, &mut d);
+        for b in 0..batch {
+            let v = s[b * STATE_DIM];
+            assert!(s[b * STATE_DIM..(b + 1) * STATE_DIM].iter().all(|&x| x == v));
+            assert_eq!(r[b], -v);
+            assert_eq!(ns[b * STATE_DIM], v + 1.0);
+            assert_eq!(a[b], (v as usize % 5) as i32);
+        }
+    }
+
+    #[test]
+    fn done_flag_converts_to_float() {
+        let mut rb = ReplayBuffer::new(2);
+        let mut tr = t(1.0);
+        tr.done = true;
+        rb.push(tr);
+        let mut s = vec![0.0; STATE_DIM];
+        let mut a = vec![0i32; 1];
+        let mut r = vec![0.0f32; 1];
+        let mut ns = vec![0.0; STATE_DIM];
+        let mut d = vec![0.0f32; 1];
+        let mut rng = Rng::new(2);
+        rb.sample_into(&mut rng, 1, &mut s, &mut a, &mut r, &mut ns, &mut d);
+        assert_eq!(d[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay buffer")]
+    fn empty_sample_panics() {
+        let rb = ReplayBuffer::new(2);
+        let mut rng = Rng::new(1);
+        let mut s = vec![0.0; STATE_DIM];
+        let mut a = vec![0i32; 1];
+        let mut r = vec![0.0f32; 1];
+        let mut ns = vec![0.0; STATE_DIM];
+        let mut d = vec![0.0f32; 1];
+        rb.sample_into(&mut rng, 1, &mut s, &mut a, &mut r, &mut ns, &mut d);
+    }
+}

@@ -1,0 +1,222 @@
+//! Rust-side DQN training loop driving the AOT `dqn_train_step` via PJRT.
+//!
+//! Python is compile-time only: the entire training loop — episodes over
+//! the training trace, ε decay, replay sampling, target-network syncs —
+//! runs here, with every gradient step executed by the AOT artifact.
+//!
+//! Schedule (paper §IV-A4 scaled to this testbed): per episode the agent
+//! replays the training trace slice with ε-greedy exploration, harvested
+//! transitions land in the 10,000-slot replay buffer, then
+//! `steps_per_episode` Adam steps are applied (batch 64, lr 1e-3, γ 0.99).
+//! The target network syncs every `target_sync_steps` gradient steps, ε
+//! decays ×0.95 per episode to 0.05. λ_carbon is sampled per episode so the
+//! network learns the preference-conditioned policy (§III-C).
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::energy::model::EnergyModel;
+use crate::policy::native_mlp::NativeMlp;
+use crate::rl::agent::EpsilonGreedyAgent;
+use crate::rl::encoder::STATE_DIM;
+use crate::rl::qnet::QNetParams;
+use crate::rl::replay::ReplayBuffer;
+use crate::runtime::{ArtifactSet, PjrtRuntime, TrainStep};
+use crate::simulator::engine::{SimConfig, Simulator};
+use crate::trace::model::Trace;
+use crate::util::rng::Rng;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub episodes: usize,
+    pub steps_per_episode: usize,
+    pub replay_capacity: usize,
+    pub batch: usize,
+    pub epsilon_start: f64,
+    pub epsilon_min: f64,
+    pub epsilon_decay: f64,
+    pub target_sync_steps: usize,
+    /// Fixed λ_carbon, or None to sample per episode from {0.1 … 0.9}.
+    pub lambda_carbon: Option<f64>,
+    pub seed: u64,
+    /// Print per-episode progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            episodes: 30,
+            steps_per_episode: 800,
+            replay_capacity: 10_000,
+            batch: 64,
+            epsilon_start: 1.0,
+            epsilon_min: 0.05,
+            epsilon_decay: 0.95,
+            target_sync_steps: 500,
+            lambda_carbon: None,
+            seed: 17,
+            verbose: true,
+        }
+    }
+}
+
+impl TrainerConfig {
+    /// Tiny schedule for tests.
+    pub fn smoke() -> Self {
+        TrainerConfig {
+            episodes: 2,
+            steps_per_episode: 10,
+            verbose: false,
+            ..TrainerConfig::default()
+        }
+    }
+}
+
+/// Per-episode training statistics.
+#[derive(Debug, Clone)]
+pub struct EpisodeStats {
+    pub episode: usize,
+    pub epsilon: f64,
+    pub lambda: f64,
+    pub transitions: usize,
+    pub mean_loss: f32,
+    pub episode_reward: f64,
+}
+
+/// Final training report.
+pub struct TrainReport {
+    pub params: QNetParams,
+    pub episodes: Vec<EpisodeStats>,
+    pub total_steps: u64,
+}
+
+/// Train a DQN on `trace` and return the learned parameters.
+pub fn train(
+    artifacts: &ArtifactSet,
+    runtime: &PjrtRuntime,
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    cfg: &TrainerConfig,
+) -> anyhow::Result<TrainReport> {
+    let dims = artifacts.manifest.dims();
+    anyhow::ensure!(cfg.batch == artifacts.manifest.train_batch, "batch mismatch with artifact");
+
+    let exe = runtime.load_hlo_text(artifacts.train_step_path().to_str().unwrap())?;
+    let step_exe = TrainStep::new(exe, cfg.batch, dims);
+
+    let mut params = artifacts.init_params()?;
+    let mut target = params.clone();
+    let mut m = QNetParams::zeros(dims);
+    let mut v = QNetParams::zeros(dims);
+
+    let mut replay = ReplayBuffer::new(cfg.replay_capacity);
+    let mut rng = Rng::new(cfg.seed);
+    let mut epsilon = cfg.epsilon_start;
+    let mut t_step: u64 = 0;
+    let mut episodes = Vec::with_capacity(cfg.episodes);
+
+    // Flat sample buffers reused across steps.
+    let b = cfg.batch;
+    let mut s_buf = vec![0.0f32; b * STATE_DIM];
+    let mut a_buf = vec![0i32; b];
+    let mut r_buf = vec![0.0f32; b];
+    let mut ns_buf = vec![0.0f32; b * STATE_DIM];
+    let mut d_buf = vec![0.0f32; b];
+
+    let lambda_grid = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+    for ep in 0..cfg.episodes {
+        let lambda = cfg
+            .lambda_carbon
+            .unwrap_or_else(|| *rng.choice(&lambda_grid));
+
+        // --- Rollout: ε-greedy over the training trace.
+        let mut agent =
+            EpsilonGreedyAgent::new(NativeMlp::new(params.clone()), epsilon, cfg.seed ^ ep as u64);
+        let sim_cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
+        let sim = Simulator::new(trace, ci, energy.clone(), sim_cfg);
+        sim.run(&mut agent);
+        let episode_reward = agent.episode_reward;
+        let transitions = agent.take_transitions();
+        let n_tr = transitions.len();
+        for t in transitions {
+            replay.push(t);
+        }
+
+        // --- Gradient steps.
+        let mut loss_sum = 0.0f32;
+        let mut loss_n = 0u32;
+        if replay.len() >= b {
+            for _ in 0..cfg.steps_per_episode {
+                replay.sample_into(
+                    &mut rng, b, &mut s_buf, &mut a_buf, &mut r_buf, &mut ns_buf,
+                    &mut d_buf,
+                );
+                t_step += 1;
+                let out = step_exe.step(
+                    &params,
+                    &target,
+                    &m,
+                    &v,
+                    t_step as f32,
+                    &s_buf,
+                    &a_buf,
+                    &r_buf,
+                    &ns_buf,
+                    &d_buf,
+                )?;
+                params = out.params;
+                m = out.m;
+                v = out.v;
+                loss_sum += out.loss;
+                loss_n += 1;
+                if t_step % cfg.target_sync_steps as u64 == 0 {
+                    target = params.clone();
+                }
+            }
+        }
+
+        let stats = EpisodeStats {
+            episode: ep,
+            epsilon,
+            lambda,
+            transitions: n_tr,
+            mean_loss: if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN },
+            episode_reward,
+        };
+        if cfg.verbose {
+            println!(
+                "[train] ep {:>3} eps={:.3} lambda={:.1} transitions={:>7} loss={:.5} reward={:.1}",
+                stats.episode,
+                stats.epsilon,
+                stats.lambda,
+                stats.transitions,
+                stats.mean_loss,
+                stats.episode_reward
+            );
+        }
+        episodes.push(stats);
+        epsilon = (epsilon * cfg.epsilon_decay).max(cfg.epsilon_min);
+    }
+
+    Ok(TrainReport { params, episodes, total_steps: t_step })
+}
+
+/// Train and persist the weights into the artifact directory.
+pub fn train_and_save(
+    artifacts: &ArtifactSet,
+    runtime: &PjrtRuntime,
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    cfg: &TrainerConfig,
+) -> anyhow::Result<TrainReport> {
+    let report = train(artifacts, runtime, trace, ci, energy, cfg)?;
+    let path = artifacts.trained_weights_path();
+    crate::rl::weights::save_params(path.to_str().unwrap(), &report.params)?;
+    if cfg.verbose {
+        println!("[train] saved weights to {}", path.display());
+    }
+    Ok(report)
+}

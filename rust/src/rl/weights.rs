@@ -1,0 +1,161 @@
+//! LACEW001 weight-file I/O — the binary format shared with
+//! `python/compile/aot.py::write_weights` (change in lockstep).
+//!
+//! Layout (little-endian):
+//! `magic[8] | u32 n | n × ( u32 name_len | name | u32 ndim | u32 dims[] |
+//! f32 data[] )`
+
+use std::io::{Read, Write};
+
+use crate::rl::qnet::QNetParams;
+
+pub const MAGIC: &[u8; 8] = b"LACEW001";
+
+/// Named tensor list as stored on disk.
+pub type NamedTensors = Vec<(String, Vec<usize>, Vec<f32>)>;
+
+/// Read every tensor from a LACEW001 stream.
+pub fn read_tensors<R: Read>(mut r: R) -> anyhow::Result<NamedTensors> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic: {magic:?}");
+    let n = read_u32(&mut r)? as usize;
+    anyhow::ensure!(n <= 1024, "implausible tensor count {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        anyhow::ensure!(name_len <= 256, "implausible name length {name_len}");
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let ndim = read_u32(&mut r)? as usize;
+        anyhow::ensure!(ndim <= 8, "implausible rank {ndim}");
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let count: usize = dims.iter().product::<usize>().max(1);
+        anyhow::ensure!(count <= 64 << 20, "implausible tensor size {count}");
+        let mut bytes = vec![0u8; count * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, dims, data));
+    }
+    Ok(out)
+}
+
+/// Write tensors to a LACEW001 stream.
+pub fn write_tensors<W: Write>(mut w: W, tensors: &NamedTensors) -> anyhow::Result<()> {
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, tensors.len() as u32)?;
+    for (name, dims, data) in tensors {
+        let expect: usize = dims.iter().product::<usize>().max(1);
+        anyhow::ensure!(expect == data.len(), "tensor '{name}' shape/data mismatch");
+        write_u32(&mut w, name.len() as u32)?;
+        w.write_all(name.as_bytes())?;
+        write_u32(&mut w, dims.len() as u32)?;
+        for &d in dims {
+            write_u32(&mut w, d as u32)?;
+        }
+        for &v in data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load Q-network parameters from a weight file.
+pub fn load_params(path: &str) -> anyhow::Result<QNetParams> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {path}: {e}"))?;
+    let named = read_tensors(std::io::BufReader::new(f))?;
+    QNetParams::from_named(&named)
+}
+
+/// Save Q-network parameters to a weight file.
+pub fn save_params(path: &str, params: &QNetParams) -> anyhow::Result<()> {
+    let named: NamedTensors = params
+        .tensors()
+        .iter()
+        .map(|(n, s, d)| (n.to_string(), s.clone(), (*d).clone()))
+        .collect();
+    let f = std::fs::File::create(path)?;
+    write_tensors(std::io::BufWriter::new(f), &named)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> anyhow::Result<()> {
+    Ok(w.write_all(&v.to_le_bytes())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let p = {
+            let mut p = QNetParams::zeros((3, 4, 4, 2));
+            p.w1[0] = 1.5;
+            p.b3[1] = -2.25;
+            p
+        };
+        let named: NamedTensors = p
+            .tensors()
+            .iter()
+            .map(|(n, s, d)| (n.to_string(), s.clone(), (*d).clone()))
+            .collect();
+        let mut buf = Vec::new();
+        write_tensors(&mut buf, &named).unwrap();
+        let back = read_tensors(buf.as_slice()).unwrap();
+        let q = QNetParams::from_named(&back).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTMAGIC\x00\x00\x00\x00".to_vec();
+        assert!(read_tensors(buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_on_write() {
+        let named: NamedTensors = vec![("x".into(), vec![2, 2], vec![1.0; 3])];
+        let mut buf = Vec::new();
+        assert!(write_tensors(&mut buf, &named).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = QNetParams::zeros((10, 64, 64, 5));
+        let path = std::env::temp_dir().join("lace_rl_weights_test.bin");
+        let path = path.to_str().unwrap();
+        save_params(path, &p).unwrap();
+        let q = load_params(path).unwrap();
+        assert_eq!(p, q);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn reads_python_written_init_weights_if_present() {
+        // Cross-language check against the artifact the AOT build wrote.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/init_weights.bin");
+        if !std::path::Path::new(path).exists() {
+            return; // artifacts not built in this environment
+        }
+        let p = load_params(path).unwrap();
+        assert_eq!(p.dims, (10, 64, 64, 5));
+        // He-uniform bound on w1: sqrt(6/10)
+        let bound = (6.0f32 / 10.0).sqrt() + 1e-6;
+        assert!(p.w1.iter().all(|w| w.abs() <= bound));
+        assert!(p.b1.iter().all(|&b| b == 0.0));
+    }
+}

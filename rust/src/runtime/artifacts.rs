@@ -1,0 +1,199 @@
+//! Artifact discovery + manifest parsing.
+//!
+//! `make artifacts` populates `artifacts/` with the HLO-text executables,
+//! deterministic init weights, and a JSON manifest describing the network
+//! dims and hyper-parameters. This module is the single source of truth
+//! for artifact paths and manifest consistency checks.
+
+use std::path::{Path, PathBuf};
+
+use crate::rl::qnet::QNetParams;
+use crate::util::json::Json;
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub state_dim: usize,
+    pub hidden: (usize, usize),
+    pub n_actions: usize,
+    pub actions_sec: Vec<f64>,
+    pub train_batch: usize,
+    pub gamma: f64,
+    pub lr: f64,
+    pub infer_batches: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(src)?;
+        let usize_field = |k: &str| -> anyhow::Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{k}'"))
+        };
+        let hidden = j
+            .get("hidden")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'hidden'"))?;
+        anyhow::ensure!(hidden.len() == 2, "expected 2 hidden sizes");
+        let arr_f64 = |k: &str| -> anyhow::Result<Vec<f64>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{k}'"))
+        };
+        Ok(Manifest {
+            state_dim: usize_field("state_dim")?,
+            hidden: (
+                hidden[0].as_usize().unwrap_or(0),
+                hidden[1].as_usize().unwrap_or(0),
+            ),
+            n_actions: usize_field("n_actions")?,
+            actions_sec: arr_f64("actions_sec")?,
+            train_batch: usize_field("train_batch")?,
+            gamma: j.get("gamma").and_then(Json::as_f64).unwrap_or(0.99),
+            lr: j.get("lr").and_then(Json::as_f64).unwrap_or(1e-3),
+            infer_batches: arr_f64("infer_batches")?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+        })
+    }
+
+    /// Network dims tuple used by [`QNetParams`].
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.state_dim, self.hidden.0, self.hidden.1, self.n_actions)
+    }
+}
+
+/// The artifact directory with validated manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactSet {
+    /// Open and validate `dir` (defaults used by the CLI: `./artifacts`).
+    pub fn open(dir: &str) -> anyhow::Result<ArtifactSet> {
+        let dir = PathBuf::from(dir);
+        let mpath = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&mpath)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", mpath.display()))?;
+        let manifest = Manifest::parse(&src)?;
+        anyhow::ensure!(
+            manifest.actions_sec == crate::KEEP_ALIVE_ACTIONS.to_vec(),
+            "artifact action set {:?} != crate KEEP_ALIVE_ACTIONS {:?}",
+            manifest.actions_sec,
+            crate::KEEP_ALIVE_ACTIONS
+        );
+        anyhow::ensure!(
+            manifest.state_dim == crate::rl::encoder::STATE_DIM,
+            "artifact state_dim {} != encoder STATE_DIM {}",
+            manifest.state_dim,
+            crate::rl::encoder::STATE_DIM
+        );
+        let a = ArtifactSet { dir, manifest };
+        for p in [
+            a.infer_path(1),
+            a.train_step_path(),
+            a.init_weights_path(),
+        ] {
+            anyhow::ensure!(p.exists(), "missing artifact {}", p.display());
+        }
+        Ok(a)
+    }
+
+    pub fn infer_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("dqn_infer_b{batch}.hlo.txt"))
+    }
+
+    pub fn infer_jnp_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("dqn_infer_jnp_b{batch}.hlo.txt"))
+    }
+
+    pub fn train_step_path(&self) -> PathBuf {
+        self.dir.join("dqn_train_step.hlo.txt")
+    }
+
+    pub fn init_weights_path(&self) -> PathBuf {
+        self.dir.join("init_weights.bin")
+    }
+
+    /// Path where trained weights are stored by the trainer.
+    pub fn trained_weights_path(&self) -> PathBuf {
+        self.dir.join("trained_weights.bin")
+    }
+
+    /// Load the deterministic init parameters.
+    pub fn init_params(&self) -> anyhow::Result<QNetParams> {
+        let p = crate::rl::weights::load_params(
+            self.init_weights_path().to_str().unwrap(),
+        )?;
+        anyhow::ensure!(p.dims == self.manifest.dims(), "init weights dims mismatch");
+        Ok(p)
+    }
+
+    /// Load trained weights if present, else the init weights.
+    pub fn best_params(&self) -> anyhow::Result<QNetParams> {
+        let trained = self.trained_weights_path();
+        if trained.exists() {
+            crate::rl::weights::load_params(trained.to_str().unwrap())
+        } else {
+            self.init_params()
+        }
+    }
+}
+
+/// Default artifact directory relative to the repo root.
+pub fn default_dir() -> String {
+    // Respect LACE_RL_ARTIFACTS for tests/CI; fall back to ./artifacts or
+    // the crate-relative path when running from elsewhere.
+    if let Ok(d) = std::env::var("LACE_RL_ARTIFACTS") {
+        return d;
+    }
+    if Path::new("artifacts/manifest.json").exists() {
+        return "artifacts".to_string();
+    }
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "state_dim": 10, "hidden": [64, 64], "n_actions": 5,
+      "actions_sec": [1.0, 5.0, 10.0, 30.0, 60.0],
+      "train_batch": 64, "gamma": 0.99, "lr": 0.001,
+      "adam": [0.9, 0.999, 1e-8], "huber_delta": 1.0,
+      "param_keys": ["w1","b1","w2","b2","w3","b3"],
+      "infer_batches": [1, 256], "seed": 0
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.dims(), (10, 64, 64, 5));
+        assert_eq!(m.actions_sec, vec![1.0, 5.0, 10.0, 30.0, 60.0]);
+        assert_eq!(m.train_batch, 64);
+        assert_eq!(m.infer_batches, vec![1, 256]);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn open_real_artifacts_if_present() {
+        let dir = default_dir();
+        if !Path::new(&dir).join("manifest.json").exists() {
+            return;
+        }
+        let a = ArtifactSet::open(&dir).unwrap();
+        assert_eq!(a.manifest.dims(), (10, 64, 64, 5));
+        let p = a.init_params().unwrap();
+        assert_eq!(p.dims, (10, 64, 64, 5));
+    }
+}

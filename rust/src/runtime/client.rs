@@ -1,0 +1,88 @@
+//! PJRT client + generic executable wrapper.
+
+use anyhow::Context;
+
+/// A PJRT CPU client owning compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client (one per process is plenty; compilation is
+    /// cached per executable, not per call).
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &str) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable { exe, path: path.to_string() })
+    }
+}
+
+/// One compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so the single output is a tuple that `run`
+/// decomposes into per-output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: String,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the decomposed
+    /// output tuple transferred to host.
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("transferring result to host")?;
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// Host-side tensor helpers.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        debug_assert_eq!(dims[0], data.len());
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Copy a literal back to an f32 vec.
+pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

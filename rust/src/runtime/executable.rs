@@ -1,0 +1,133 @@
+//! Typed wrappers over the AOT executables: Q-network inference and the
+//! full DQN train step. Input/output layouts mirror
+//! `python/compile/model.py` (flat signature documented on
+//! `dqn_train_step`).
+
+use crate::rl::qnet::QNetParams;
+use crate::runtime::client::{
+    literal_f32, literal_i32, literal_scalar_f32, to_f32_vec, Executable,
+};
+
+/// Convert params to the 6 input literals in PARAM_KEYS order.
+fn param_literals(p: &QNetParams) -> anyhow::Result<Vec<xla::Literal>> {
+    p.tensors()
+        .iter()
+        .map(|(_, shape, data)| literal_f32(data, shape))
+        .collect()
+}
+
+/// Copy 6 consecutive output literals back into a [`QNetParams`].
+fn params_from_literals(
+    lits: &[xla::Literal],
+    dims: (usize, usize, usize, usize),
+) -> anyhow::Result<QNetParams> {
+    anyhow::ensure!(lits.len() >= 6, "expected ≥6 literals");
+    let mut p = QNetParams::zeros(dims);
+    for (dst, lit) in p.tensors_mut().into_iter().zip(lits.iter()) {
+        let v = to_f32_vec(lit)?;
+        anyhow::ensure!(v.len() == dst.len(), "tensor size mismatch");
+        *dst = v;
+    }
+    Ok(p)
+}
+
+/// Batched Q-network inference executable (`dqn_infer_b{N}.hlo.txt`).
+pub struct QNetInfer {
+    exe: Executable,
+    pub batch: usize,
+    dims: (usize, usize, usize, usize),
+}
+
+impl QNetInfer {
+    pub fn new(exe: Executable, batch: usize, dims: (usize, usize, usize, usize)) -> Self {
+        QNetInfer { exe, batch, dims }
+    }
+
+    /// Q-values for `batch` states. `states` is row-major
+    /// `[batch * state_dim]`; returns `[batch * n_actions]`.
+    pub fn q_values(&self, params: &QNetParams, states: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            states.len() == self.batch * self.dims.0,
+            "states length {} != batch {} × state_dim {}",
+            states.len(),
+            self.batch,
+            self.dims.0
+        );
+        let mut inputs = param_literals(params)?;
+        inputs.push(literal_f32(states, &[self.batch, self.dims.0])?);
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        let q = to_f32_vec(&out[0])?;
+        anyhow::ensure!(q.len() == self.batch * self.dims.3, "q shape mismatch");
+        Ok(q)
+    }
+}
+
+/// The AOT DQN + Adam train step (`dqn_train_step.hlo.txt`).
+///
+/// One call = one gradient step: samples are provided as flat arrays, the
+/// returned params/moments replace the host copies. Pure function — the
+/// caller owns all state, so training is resumable and deterministic.
+pub struct TrainStep {
+    exe: Executable,
+    pub batch: usize,
+    dims: (usize, usize, usize, usize),
+}
+
+/// Result of one train step.
+pub struct StepOut {
+    pub params: QNetParams,
+    pub m: QNetParams,
+    pub v: QNetParams,
+    pub loss: f32,
+}
+
+impl TrainStep {
+    pub fn new(exe: Executable, batch: usize, dims: (usize, usize, usize, usize)) -> Self {
+        TrainStep { exe, batch, dims }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        params: &QNetParams,
+        target: &QNetParams,
+        m: &QNetParams,
+        v: &QNetParams,
+        t: f32,
+        states: &[f32],
+        actions: &[i32],
+        rewards: &[f32],
+        next_states: &[f32],
+        dones: &[f32],
+    ) -> anyhow::Result<StepOut> {
+        let b = self.batch;
+        let d = self.dims.0;
+        anyhow::ensure!(states.len() == b * d && next_states.len() == b * d);
+        anyhow::ensure!(actions.len() == b && rewards.len() == b && dones.len() == b);
+
+        let mut inputs = Vec::with_capacity(30);
+        inputs.extend(param_literals(params)?);
+        inputs.extend(param_literals(target)?);
+        inputs.extend(param_literals(m)?);
+        inputs.extend(param_literals(v)?);
+        inputs.push(literal_scalar_f32(t));
+        inputs.push(literal_f32(states, &[b, d])?);
+        inputs.push(literal_i32(actions));
+        inputs.push(literal_f32(rewards, &[b])?);
+        inputs.push(literal_f32(next_states, &[b, d])?);
+        inputs.push(literal_f32(dones, &[b])?);
+
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 19, "expected 19 outputs, got {}", out.len());
+        Ok(StepOut {
+            params: params_from_literals(&out[0..6], self.dims)?,
+            m: params_from_literals(&out[6..12], self.dims)?,
+            v: params_from_literals(&out[12..18], self.dims)?,
+            loss: to_f32_vec(&out[18])?
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("empty loss output"))?,
+        })
+    }
+}

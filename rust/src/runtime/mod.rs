@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile, execute.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`). HLO *text* is
+//! the interchange format — the crate's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::ArtifactSet;
+pub use client::{Executable, PjrtRuntime};
+pub use executable::{QNetInfer, TrainStep};

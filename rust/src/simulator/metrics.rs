@@ -1,0 +1,113 @@
+//! Simulation metrics (paper §IV-A6) including the composite LCP and IRI.
+
+use crate::util::stats::Running;
+
+/// Aggregated outcome of one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimMetrics {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    /// End-to-end latency accumulator (cold + exec + network), seconds.
+    pub latency: Running,
+    /// Keep-alive (idle) carbon, grams CO₂.
+    pub keepalive_carbon_g: f64,
+    /// Execution carbon, grams CO₂.
+    pub exec_carbon_g: f64,
+    /// Cold-start carbon, grams CO₂.
+    pub cold_carbon_g: f64,
+    /// Sum of cold-start latencies incurred (s) — the C_cold side of the
+    /// blended objective.
+    pub cold_latency_s: f64,
+    /// Total idle pod-seconds retained.
+    pub idle_pod_seconds: f64,
+    /// Total wasted idle pod-seconds (idle periods that ended in expiry).
+    pub wasted_idle_seconds: f64,
+}
+
+impl SimMetrics {
+    pub fn new() -> Self {
+        SimMetrics { latency: Running::new(), ..Default::default() }
+    }
+
+    /// Cold-start rate in [0,1].
+    pub fn cold_rate(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / self.invocations as f64
+        }
+    }
+
+    /// Mean end-to-end latency (s).
+    pub fn avg_latency_s(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Total carbon: execution + keep-alive + cold (paper §II-B).
+    pub fn total_carbon_g(&self) -> f64 {
+        self.exec_carbon_g + self.keepalive_carbon_g + self.cold_carbon_g
+    }
+
+    /// Latency–Carbon Product: avg E2E latency × total carbon
+    /// (lower is better; §IV-A6).
+    pub fn lcp(&self) -> f64 {
+        self.avg_latency_s() * self.total_carbon_g()
+    }
+
+    /// Idle Reuse Inefficiency: cold-start count × keep-alive carbon
+    /// (lower is better; §IV-A6).
+    pub fn iri(&self) -> f64 {
+        self.cold_starts as f64 * self.keepalive_carbon_g
+    }
+
+    /// One human-readable summary line (experiment harness output).
+    pub fn summary_row(&self, label: &str) -> String {
+        format!(
+            "{label:<14} cold={:<8} latency={:.4}s keepalive={:.3}g total={:.3}g LCP={:.2} IRI={:.0}",
+            self.cold_starts,
+            self.avg_latency_s(),
+            self.keepalive_carbon_g,
+            self.total_carbon_g(),
+            self.lcp(),
+            self.iri(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimMetrics {
+        let mut m = SimMetrics::new();
+        m.invocations = 100;
+        m.cold_starts = 20;
+        m.warm_starts = 80;
+        for _ in 0..100 {
+            m.latency.add(0.5);
+        }
+        m.keepalive_carbon_g = 10.0;
+        m.exec_carbon_g = 30.0;
+        m.cold_carbon_g = 5.0;
+        m
+    }
+
+    #[test]
+    fn composites() {
+        let m = sample();
+        assert!((m.cold_rate() - 0.2).abs() < 1e-12);
+        assert!((m.avg_latency_s() - 0.5).abs() < 1e-12);
+        assert!((m.total_carbon_g() - 45.0).abs() < 1e-12);
+        assert!((m.lcp() - 22.5).abs() < 1e-12);
+        assert!((m.iri() - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = SimMetrics::new();
+        assert_eq!(m.cold_rate(), 0.0);
+        assert_eq!(m.avg_latency_s(), 0.0);
+        assert_eq!(m.lcp(), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Trace-driven serverless cluster simulator (paper §III-A component 4).
+//!
+//! Replays a [`crate::trace::Trace`] against a keep-alive policy: per-
+//! function warm pools, cold/warm start accounting, CI-integrated idle
+//! carbon, and realized-outcome feedback for RL training.
+
+pub mod engine;
+pub mod metrics;
+pub mod pod;
+pub mod reuse;
+
+pub use engine::{SimConfig, SimResult, Simulator};
+pub use metrics::SimMetrics;

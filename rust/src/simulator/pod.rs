@@ -1,0 +1,75 @@
+//! Pod state for the per-function warm pool.
+
+/// A pending keep-alive decision awaiting its realized outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct Pending {
+    /// Chosen action (index into [`crate::KEEP_ALIVE_ACTIONS`]).
+    pub action: usize,
+    /// Decision (pod completion) time.
+    pub t: f64,
+}
+
+/// One container instance. Lifecycle: created on a cold start, `busy` while
+/// executing, then idle-warm until `warm_until` (set by the policy) or the
+/// next reuse, whichever comes first.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    /// Executing until this time; only available for reuse afterwards.
+    pub busy_until: f64,
+    /// Warm (reusable) until this time; meaningless while busy.
+    pub warm_until: f64,
+    /// When the current idle period started (= last completion time).
+    pub idle_start: f64,
+    /// Unresolved keep-alive decision for the current idle period.
+    pub pending: Option<Pending>,
+}
+
+impl Pod {
+    /// A pod that just started executing (cold start at `t`, finishing at
+    /// `completion`).
+    pub fn new_busy(completion: f64) -> Pod {
+        Pod {
+            busy_until: completion,
+            warm_until: f64::INFINITY, // set by the keep-alive decision
+            idle_start: completion,
+            pending: None,
+        }
+    }
+
+    /// Available to serve an arrival at time `t`?
+    #[inline]
+    pub fn available(&self, t: f64) -> bool {
+        self.busy_until <= t && self.warm_until > t
+    }
+
+    /// Expired (idle period over) as of time `t`?
+    #[inline]
+    pub fn expired(&self, t: f64) -> bool {
+        self.busy_until <= t && self.warm_until <= t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_states() {
+        let mut p = Pod::new_busy(10.0);
+        assert!(!p.available(5.0)); // busy
+        assert!(!p.expired(5.0));
+        // Completion + keep-alive decision of 30s:
+        p.warm_until = 40.0;
+        p.idle_start = 10.0;
+        assert!(p.available(10.0));
+        assert!(p.available(39.9));
+        assert!(!p.available(40.0));
+        assert!(p.expired(40.0));
+    }
+
+    #[test]
+    fn busy_pod_never_expired() {
+        let p = Pod::new_busy(10.0);
+        assert!(!p.expired(5.0));
+    }
+}

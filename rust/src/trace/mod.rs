@@ -1,0 +1,17 @@
+//! Serverless workload traces: model, synthetic generator, loader, stats.
+//!
+//! The paper evaluates on day 30 of the Huawei Public Cloud Trace (300M+
+//! request records, 1,500+ functions). That dataset is proprietary-download;
+//! per the substitution rule we build a *generative* model of it
+//! ([`synth`]) calibrated to the paper's published marginals (Fig. 1a reuse
+//! intervals, Fig. 1b cold-start latency CDF, Fig. 3b memory CDF, Table I
+//! runtime/trigger metadata), plus a CSV [`huawei`] loader that accepts the
+//! real trace when available.
+
+pub mod huawei;
+pub mod model;
+pub mod stats;
+pub mod synth;
+
+pub use model::{FunctionProfile, Invocation, Runtime, Trace, TriggerType};
+pub use synth::{SynthConfig, TraceGenerator};

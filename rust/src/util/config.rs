@@ -1,0 +1,262 @@
+//! TOML-subset experiment configuration.
+//!
+//! Supports the subset the launcher needs: `[section]` tables, `key = value`
+//! with strings, integers, floats, booleans, and flat arrays of scalars.
+//! Comments start with `#`. No nested tables-in-arrays, no dates, no
+//! multi-line strings — experiments don't need them.
+//!
+//! ```toml
+//! [workload]
+//! functions = 400
+//! duration_s = 86400.0
+//! seed = 7
+//!
+//! [policy]
+//! name = "lace-rl"
+//! lambda_carbon = 0.5
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_arr(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Arr(xs) => xs.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key -> value`. Keys before any `[section]` live
+/// in the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error on line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("missing ']'"))?;
+                section = name.trim().to_string();
+                cfg.map.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| err("missing '='"))?;
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            cfg.map
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let src = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&src)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.map.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.i64_or(section, key, default as i64) as usize
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.map
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("invalid value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "general"
+
+[workload]
+functions = 400
+duration_s = 86400.0   # one day
+bursty = true
+weights = [0.5, 0.3, 0.2]
+
+[policy]
+name = "lace-rl"
+lambda_carbon = 0.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "title", "?"), "general");
+        assert_eq!(c.i64_or("workload", "functions", 0), 400);
+        assert_eq!(c.f64_or("workload", "duration_s", 0.0), 86400.0);
+        assert!(c.bool_or("workload", "bursty", false));
+        assert_eq!(
+            c.get("workload", "weights").unwrap().as_f64_arr().unwrap(),
+            vec![0.5, 0.3, 0.2]
+        );
+        assert_eq!(c.str_or("policy", "name", "?"), "lace-rl");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.f64_or("x", "y", 1.5), 1.5);
+        assert_eq!(c.str_or("x", "y", "dft"), "dft");
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("", "k", "?"), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = Config::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.0\nc = -2\n").unwrap();
+        assert_eq!(c.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("", "b"), Some(&Value::Float(3.0)));
+        assert_eq!(c.get("", "c"), Some(&Value::Int(-2)));
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("").unwrap();
+        c.set("policy", "name", Value::Str("oracle".into()));
+        assert_eq!(c.str_or("policy", "name", "?"), "oracle");
+    }
+}

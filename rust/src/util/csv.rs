@@ -1,0 +1,217 @@
+//! Minimal CSV reader/writer with header support.
+//!
+//! Handles RFC 4180 quoting (quoted fields, embedded commas/quotes/newlines)
+//! — enough to load real Huawei-trace exports and to emit figure data files.
+
+use std::io::{BufRead, Write};
+
+/// Parse one CSV record from a reader; returns None at EOF.
+/// Handles quoted fields spanning multiple lines.
+fn read_record<R: BufRead>(r: &mut R) -> std::io::Result<Option<Vec<String>>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    // Accumulate more lines while inside an unterminated quote.
+    while quote_open(&line) {
+        let mut next = String::new();
+        if r.read_line(&mut next)? == 0 {
+            break;
+        }
+        line.push_str(&next);
+    }
+    Ok(Some(split_record(&line)))
+}
+
+fn quote_open(s: &str) -> bool {
+    let mut open = false;
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '"' {
+            if open && chars.peek() == Some(&'"') {
+                chars.next(); // escaped quote
+            } else {
+                open = !open;
+            }
+        }
+    }
+    open
+}
+
+fn split_record(line: &str) -> Vec<String> {
+    let line = line.strip_suffix('\n').unwrap_or(line);
+    let line = line.strip_suffix('\r').unwrap_or(line);
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+/// A CSV table with named columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Read a table (first record is the header).
+    pub fn read<R: BufRead>(mut r: R) -> std::io::Result<Table> {
+        let header = read_record(&mut r)?.unwrap_or_default();
+        let mut rows = Vec::new();
+        while let Some(rec) = read_record(&mut r)? {
+            if rec.len() == 1 && rec[0].is_empty() {
+                continue; // blank line
+            }
+            rows.push(rec);
+        }
+        Ok(Table { header, rows })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Table> {
+        let f = std::fs::File::open(path)?;
+        Ok(Table::read(std::io::BufReader::new(f))?)
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Typed access helpers.
+    pub fn f64_at(&self, row: usize, col: usize) -> Option<f64> {
+        self.rows.get(row)?.get(col)?.parse().ok()
+    }
+
+    pub fn str_at(&self, row: usize, col: usize) -> Option<&str> {
+        self.rows.get(row)?.get(col).map(String::as_str)
+    }
+}
+
+/// Streaming CSV writer.
+pub struct Writer<W: Write> {
+    w: W,
+}
+
+impl<W: Write> Writer<W> {
+    pub fn new(mut w: W, header: &[&str]) -> std::io::Result<Self> {
+        write_row_raw(&mut w, header.iter().copied())?;
+        Ok(Writer { w })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        write_row_raw(&mut self.w, fields.iter().map(String::as_str))
+    }
+
+    pub fn row_display<T: std::fmt::Display>(&mut self, fields: &[T]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_row_raw<'a, W: Write>(
+    w: &mut W,
+    fields: impl Iterator<Item = &'a str>,
+) -> std::io::Result<()> {
+    let mut first = true;
+    for f in fields {
+        if !first {
+            write!(w, ",")?;
+        }
+        first = false;
+        if needs_quoting(f) {
+            write!(w, "\"{}\"", f.replace('"', "\"\""))?;
+        } else {
+            write!(w, "{f}")?;
+        }
+    }
+    writeln!(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn basic_roundtrip() {
+        let src = "a,b,c\n1,2,3\n4,5,6\n";
+        let t = Table::read(Cursor::new(src)).unwrap();
+        assert_eq!(t.header, vec!["a", "b", "c"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.f64_at(1, 2), Some(6.0));
+        assert_eq!(t.col("b"), Some(1));
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let src = "name,desc\nfn1,\"has, comma\"\nfn2,\"quote \"\" inside\"\n";
+        let t = Table::read(Cursor::new(src)).unwrap();
+        assert_eq!(t.str_at(0, 1), Some("has, comma"));
+        assert_eq!(t.str_at(1, 1), Some("quote \" inside"));
+    }
+
+    #[test]
+    fn multiline_quoted_field() {
+        let src = "a,b\n1,\"line1\nline2\"\n";
+        let t = Table::read(Cursor::new(src)).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.str_at(0, 1).unwrap().contains('\n'));
+    }
+
+    #[test]
+    fn writer_quotes_when_needed() {
+        let mut out = Vec::new();
+        {
+            let mut w = Writer::new(&mut out, &["x", "y"]).unwrap();
+            w.row(&["plain".into(), "with,comma".into()]).unwrap();
+        }
+        let s = String::from_utf8(out).unwrap();
+        assert_eq!(s, "x,y\nplain,\"with,comma\"\n");
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut out = Vec::new();
+        {
+            let mut w = Writer::new(&mut out, &["k", "v"]).unwrap();
+            w.row(&["a\"b".into(), "c\nd".into()]).unwrap();
+        }
+        let t = Table::read(Cursor::new(String::from_utf8(out).unwrap())).unwrap();
+        assert_eq!(t.str_at(0, 0), Some("a\"b"));
+        assert_eq!(t.str_at(0, 1), Some("c\nd"));
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let t = Table::read(Cursor::new("a\n1\n\n2\n")).unwrap();
+        assert_eq!(t.rows.len(), 2);
+    }
+}

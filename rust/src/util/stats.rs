@@ -1,0 +1,261 @@
+//! Descriptive statistics: summaries, percentiles, empirical CDFs and
+//! fixed-bin histograms. Used by trace characterization (Fig. 1/3), the
+//! state encoder's reuse-probability estimates, and the bench harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a *sorted* slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Convenience: percentile of an unsorted slice (clones + sorts).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Empirical CDF over a sample; supports evaluation and fixed-point dumps
+/// for figure regeneration.
+#[derive(Debug, Clone)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    pub fn new(mut xs: Vec<f64>) -> Self {
+        xs.retain(|x| x.is_finite());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ecdf { sorted: xs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// P[X <= x].
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        // partition_point = count of elements <= x
+        let idx = self.sorted.partition_point(|&v| v <= x);
+        idx as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF (quantile), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q * 100.0)
+    }
+
+    /// `(x, P[X<=x])` rows at `n` evenly spaced quantiles — figure output.
+    pub fn curve(&self, n: usize) -> Vec<(f64, f64)> {
+        (0..=n)
+            .map(|i| {
+                let q = i as f64 / n as f64;
+                (self.quantile(q), q)
+            })
+            .collect()
+    }
+
+    pub fn min(&self) -> f64 {
+        *self.sorted.first().unwrap_or(&f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap_or(&f64::NAN)
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to the edge
+/// bins, mirroring the bounded keep-alive action set.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let f = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = if f < 0.0 {
+            0
+        } else if f as usize >= bins {
+            bins - 1
+        } else {
+            f as usize
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Fraction of mass at or below bin containing `x`.
+    pub fn cdf_at(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let bins = self.counts.len();
+        let f = ((x - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = if f < 0.0 {
+            return 0.0;
+        } else if f as usize >= bins {
+            bins - 1
+        } else {
+            f as usize
+        };
+        let cum: u64 = self.counts[..=idx].iter().sum();
+        cum as f64 / self.total as f64
+    }
+}
+
+/// Online mean/min/max/count accumulator (no allocation in hot loops).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_eval_monotone() {
+        let e = Ecdf::new(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(e.eval(0.5), 0.0);
+        assert!((e.eval(2.5) - 0.4).abs() < 1e-12);
+        assert_eq!(e.eval(5.0), 1.0);
+        let mut prev = -1.0;
+        for i in 0..60 {
+            let v = e.eval(i as f64 * 0.1);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn ecdf_quantile_roundtrip() {
+        let e = Ecdf::new((1..=100).map(|i| i as f64).collect());
+        assert!((e.quantile(0.5) - 50.5).abs() < 1.0);
+        assert_eq!(e.quantile(0.0), 1.0);
+        assert_eq!(e.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn ecdf_drops_non_finite() {
+        let e = Ecdf::new(vec![1.0, f64::NAN, 2.0, f64::INFINITY]);
+        assert_eq!(e.len(), 2);
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-5.0);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(42.0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 2);
+        assert!((h.cdf_at(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_tracks_extremes() {
+        let mut r = Running::new();
+        for x in [3.0, -1.0, 7.0] {
+            r.add(x);
+        }
+        assert_eq!(r.count, 3);
+        assert_eq!(r.min, -1.0);
+        assert_eq!(r.max, 7.0);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Integration: the AOT artifact chain (Pallas/jax → HLO text → PJRT)
+//! against the native Rust implementations. Requires `make artifacts`.
+
+use lace_rl::policy::native_mlp::NativeMlp;
+use lace_rl::rl::qnet::QNetParams;
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, QNetInfer, TrainStep};
+use lace_rl::util::rng::Rng;
+
+fn open() -> Option<(ArtifactSet, PjrtRuntime)> {
+    let dir = artifacts::default_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping PJRT integration tests");
+        return None;
+    }
+    let art = ArtifactSet::open(&dir).expect("artifact set");
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    Some((art, rt))
+}
+
+fn random_states(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f64() as f32).collect()
+}
+
+#[test]
+fn pallas_infer_b1_matches_native() {
+    let Some((art, rt)) = open() else { return };
+    let params = art.init_params().unwrap();
+    let dims = art.manifest.dims();
+    let infer = QNetInfer::new(
+        rt.load_hlo_text(art.infer_path(1).to_str().unwrap()).unwrap(),
+        1,
+        dims,
+    );
+    let mut native = NativeMlp::new(params.clone());
+    let mut rng = Rng::new(1);
+    for _ in 0..20 {
+        let state = random_states(&mut rng, dims.0);
+        let q_pjrt = infer.q_values(&params, &state).unwrap();
+        let q_native = native.forward(&state);
+        for (a, b) in q_pjrt.iter().zip(q_native.iter()) {
+            assert!((a - b).abs() < 1e-4, "pjrt {a} vs native {b}");
+        }
+    }
+}
+
+#[test]
+fn pallas_infer_b256_matches_native() {
+    let Some((art, rt)) = open() else { return };
+    let params = art.init_params().unwrap();
+    let dims = art.manifest.dims();
+    let infer = QNetInfer::new(
+        rt.load_hlo_text(art.infer_path(256).to_str().unwrap()).unwrap(),
+        256,
+        dims,
+    );
+    let mut rng = Rng::new(2);
+    let states = random_states(&mut rng, 256 * dims.0);
+    let q = infer.q_values(&params, &states).unwrap();
+    let mut native = NativeMlp::new(params.clone());
+    for b in [0usize, 17, 255] {
+        let qs = &q[b * dims.3..(b + 1) * dims.3];
+        let qn = native.forward(&states[b * dims.0..(b + 1) * dims.0]);
+        for (a, n) in qs.iter().zip(qn.iter()) {
+            assert!((a - n).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    let Some((art, rt)) = open() else { return };
+    let params = art.init_params().unwrap();
+    let dims = art.manifest.dims();
+    let pallas = QNetInfer::new(
+        rt.load_hlo_text(art.infer_path(1).to_str().unwrap()).unwrap(),
+        1,
+        dims,
+    );
+    let jnp = QNetInfer::new(
+        rt.load_hlo_text(art.infer_jnp_path(1).to_str().unwrap()).unwrap(),
+        1,
+        dims,
+    );
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let state = random_states(&mut rng, dims.0);
+        let qa = pallas.q_values(&params, &state).unwrap();
+        let qb = jnp.q_values(&params, &state).unwrap();
+        for (a, b) in qa.iter().zip(qb.iter()) {
+            assert!((a - b).abs() < 1e-5, "pallas {a} vs jnp {b}");
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some((art, rt)) = open() else { return };
+    let dims = art.manifest.dims();
+    let b = art.manifest.train_batch;
+    let step = TrainStep::new(
+        rt.load_hlo_text(art.train_step_path().to_str().unwrap()).unwrap(),
+        b,
+        dims,
+    );
+    let mut params = art.init_params().unwrap();
+    let target = params.clone();
+    let mut m = QNetParams::zeros(dims);
+    let mut v = QNetParams::zeros(dims);
+    let mut rng = Rng::new(4);
+    let states = random_states(&mut rng, b * dims.0);
+    let next_states = random_states(&mut rng, b * dims.0);
+    let actions: Vec<i32> = (0..b).map(|_| rng.index(dims.3) as i32).collect();
+    let rewards: Vec<f32> = (0..b).map(|_| -(rng.f64() as f32)).collect();
+    let dones: Vec<f32> = (0..b).map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 }).collect();
+
+    let mut losses = Vec::new();
+    for t in 1..=40 {
+        let out = step
+            .step(&params, &target, &m, &v, t as f32, &states, &actions, &rewards, &next_states, &dones)
+            .unwrap();
+        params = out.params;
+        m = out.m;
+        v = out.v;
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve: {:?}",
+        &losses[..5]
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn train_step_is_deterministic() {
+    let Some((art, rt)) = open() else { return };
+    let dims = art.manifest.dims();
+    let b = art.manifest.train_batch;
+    let step = TrainStep::new(
+        rt.load_hlo_text(art.train_step_path().to_str().unwrap()).unwrap(),
+        b,
+        dims,
+    );
+    let params = art.init_params().unwrap();
+    let zero = QNetParams::zeros(dims);
+    let states = vec![0.25f32; b * dims.0];
+    let actions = vec![1i32; b];
+    let rewards = vec![-0.5f32; b];
+    let dones = vec![0.0f32; b];
+    let o1 = step
+        .step(&params, &params, &zero, &zero, 1.0, &states, &actions, &rewards, &states, &dones)
+        .unwrap();
+    let o2 = step
+        .step(&params, &params, &zero, &zero, 1.0, &states, &actions, &rewards, &states, &dones)
+        .unwrap();
+    assert_eq!(o1.loss, o2.loss);
+    assert_eq!(o1.params.max_abs_diff(&o2.params), 0.0);
+}
+
+#[test]
+fn train_step_gradient_direction_sane() {
+    // With targets strictly below current Q for action a, the step must
+    // decrease Q(s, a) (gradient descent on (q_sel - target)^2).
+    let Some((art, rt)) = open() else { return };
+    let dims = art.manifest.dims();
+    let b = art.manifest.train_batch;
+    let step = TrainStep::new(
+        rt.load_hlo_text(art.train_step_path().to_str().unwrap()).unwrap(),
+        b,
+        dims,
+    );
+    let params = art.init_params().unwrap();
+    let zero = QNetParams::zeros(dims);
+    let state = vec![0.5f32; dims.0];
+    let states: Vec<f32> = state.repeat(b);
+    let actions = vec![2i32; b];
+    let rewards = vec![-100.0f32; b]; // target far below any Q
+    let dones = vec![1.0f32; b]; // target = reward exactly
+    let out = step
+        .step(&params, &params, &zero, &zero, 1.0, &states, &actions, &rewards, &states, &dones)
+        .unwrap();
+    let q_before = NativeMlp::new(params.clone()).forward(&state)[2];
+    let q_after = NativeMlp::new(out.params).forward(&state)[2];
+    assert!(
+        q_after < q_before,
+        "Q(s,a) should move toward the low target: {q_before} -> {q_after}"
+    );
+}

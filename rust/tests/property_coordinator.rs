@@ -1,0 +1,208 @@
+//! Property tests on coordinator invariants: routing, lifecycle, and
+//! agreement with the offline simulator on randomized workloads.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::coordinator::router::{InvocationRequest, Router, RouterConfig};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::{CarbonMin, FixedTimeout, LatencyMin};
+use lace_rl::prop_assert;
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+use lace_rl::KEEP_ALIVE_ACTIONS;
+
+fn random_trace(rng: &mut Rng) -> lace_rl::trace::model::Trace {
+    TraceGenerator::new(SynthConfig {
+        n_functions: 3 + rng.index(25),
+        duration_s: 200.0 + rng.f64() * 2_000.0,
+        target_invocations: 300 + rng.index(3_000),
+        bursty_frac: rng.f64() * 0.5,
+        periodic_frac: rng.f64() * 0.3,
+        diurnal: rng.chance(0.5),
+        gap_median_s: 2.0 + rng.f64() * 20.0,
+        gap_sigma: 1.0 + rng.f64(),
+        sparse_frac: rng.f64() * 0.4,
+        sparse_gap_median_s: 120.0 + rng.f64() * 600.0,
+        seed: rng.next_u64(),
+    })
+    .generate()
+}
+
+fn to_requests(trace: &lace_rl::trace::model::Trace) -> Vec<InvocationRequest> {
+    trace
+        .invocations
+        .iter()
+        .enumerate()
+        .map(|(id, inv)| InvocationRequest {
+            id: id as u64,
+            t: inv.t,
+            func: inv.func,
+            exec_s: inv.exec_s,
+        })
+        .collect()
+}
+
+#[test]
+fn router_answers_every_request_in_order() {
+    forall("router completeness", 20, 201, |rng| {
+        let trace = random_trace(rng);
+        let mut router = Router::new(
+            trace.functions.clone(),
+            FixedTimeout::new(*rng.choice(&KEEP_ALIVE_ACTIONS)),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        let reqs = to_requests(&trace);
+        let mut last_id = None;
+        for req in &reqs {
+            let resp = router.handle(req);
+            prop_assert!(resp.id == req.id, "response id mismatch");
+            prop_assert!(
+                last_id.map(|l: u64| resp.id == l + 1).unwrap_or(resp.id == 0),
+                "responses out of order"
+            );
+            last_id = Some(resp.id);
+        }
+        prop_assert!(
+            router.metrics.requests as usize == reqs.len(),
+            "request count mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn first_invocation_of_each_function_is_cold() {
+    forall("first is cold", 20, 202, |rng| {
+        let trace = random_trace(rng);
+        let mut router = Router::new(
+            trace.functions.clone(),
+            LatencyMin,
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        let mut seen = vec![false; trace.functions.len()];
+        for req in &to_requests(&trace) {
+            let resp = router.handle(req);
+            if !seen[req.func as usize] {
+                prop_assert!(resp.cold, "first invocation of fn {} not cold", req.func);
+                seen[req.func as usize] = true;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn keepalive_always_from_policy_range() {
+    forall("keepalive bounded", 15, 203, |rng| {
+        let trace = random_trace(rng);
+        let mut router = Router::new(
+            trace.functions.clone(),
+            CarbonMin,
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        for req in &to_requests(&trace) {
+            let resp = router.handle(req);
+            prop_assert!(
+                resp.keepalive_s == KEEP_ALIVE_ACTIONS[0],
+                "carbon-min must always pick the minimum action"
+            );
+            prop_assert!(
+                resp.latency_s >= lace_rl::NETWORK_LATENCY_S,
+                "latency below network floor"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_matches_simulator_exactly() {
+    // The online control plane and the offline simulator implement the
+    // same semantics: identical cold-start counts, latency sums, and
+    // keep-alive carbon on any workload / policy combination.
+    forall("router == simulator", 15, 204, |rng| {
+        let trace = random_trace(rng);
+        let ci = match rng.index(2) {
+            0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+            _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+        };
+        let timeout = *rng.choice(&KEEP_ALIVE_ACTIONS);
+
+        let sim = Simulator::new(&trace, &ci, EnergyModel::default(), SimConfig::default());
+        let sim_m = sim.run(&mut FixedTimeout::new(timeout)).metrics;
+
+        let mut router = Router::new(
+            trace.functions.clone(),
+            FixedTimeout::new(timeout),
+            ci.clone(),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        for req in &to_requests(&trace) {
+            router.handle(req);
+        }
+        prop_assert!(
+            router.metrics.cold_starts == sim_m.cold_starts,
+            "cold starts: router {} vs sim {}",
+            router.metrics.cold_starts,
+            sim_m.cold_starts
+        );
+        prop_assert!(
+            (router.metrics.latency.mean() - sim_m.avg_latency_s()).abs() < 1e-9,
+            "latency mismatch"
+        );
+        // Keep-alive carbon: the router accounts expiries lazily and never
+        // flushes at end-of-trace, so it can only under-count vs the
+        // simulator (which flushes); reused spans must agree.
+        prop_assert!(
+            router.metrics.keepalive_carbon_g <= sim_m.keepalive_carbon_g + 1e-9,
+            "router idle carbon exceeds simulator's flushed total"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_and_sync_routers_agree() {
+    forall("threaded == sync", 8, 205, |rng| {
+        let trace = random_trace(rng);
+        let reqs = to_requests(&trace);
+
+        let mut sync_router = Router::new(
+            trace.functions.clone(),
+            FixedTimeout::new(10.0),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        let sync_cold: Vec<bool> = reqs.iter().map(|r| sync_router.handle(r).cold).collect();
+
+        let threaded = Router::new(
+            trace.functions.clone(),
+            FixedTimeout::new(10.0),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        let (req_tx, req_rx) = std::sync::mpsc::channel();
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || threaded.serve(req_rx, resp_tx));
+        for r in &reqs {
+            req_tx.send(r.clone()).unwrap();
+        }
+        drop(req_tx);
+        let threaded_cold: Vec<bool> = resp_rx.iter().map(|r| r.cold).collect();
+        let _ = h.join().unwrap();
+
+        prop_assert!(sync_cold == threaded_cold, "cold-start sequences differ");
+        Ok(())
+    });
+}

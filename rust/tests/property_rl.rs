@@ -1,0 +1,210 @@
+//! Property tests on the RL substrate: encoder bounds, replay-buffer
+//! invariants, weight-format round trips, and native-MLP numerics.
+
+use lace_rl::policy::native_mlp::NativeMlp;
+use lace_rl::policy::DecisionContext;
+use lace_rl::prop_assert;
+use lace_rl::rl::encoder::{encode, STATE_DIM};
+use lace_rl::rl::qnet::QNetParams;
+use lace_rl::rl::replay::{ReplayBuffer, Transition};
+use lace_rl::rl::weights;
+use lace_rl::trace::model::{FunctionProfile, Runtime, TriggerType};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+fn random_profile(rng: &mut Rng) -> FunctionProfile {
+    FunctionProfile {
+        id: rng.below(1000) as u32,
+        runtime: *rng.choice(&Runtime::ALL),
+        trigger: TriggerType::Http,
+        mem_mb: rng.f64() * 5000.0,
+        cpu_cores: 1.0 + rng.f64() * 8.0,
+        cold_start_s: rng.f64() * 30.0,
+        mean_exec_s: rng.f64(),
+    }
+}
+
+#[test]
+fn encoder_output_always_bounded() {
+    forall("encoder bounds", 200, 301, |rng| {
+        let prof = random_profile(rng);
+        let mut probs = [0.0; 5];
+        for p in probs.iter_mut() {
+            *p = rng.f64();
+        }
+        probs.sort_by(|a, b| a.partial_cmp(b).unwrap()); // monotone like real ones
+        let ctx = DecisionContext {
+            t: rng.f64() * 1e6,
+            func: &prof,
+            ci: rng.f64() * 2000.0,
+            reuse_probs: probs,
+            lambda_carbon: rng.f64(),
+            idle_power_w: rng.f64() * 100.0,
+            next_arrival_gap: None,
+        };
+        let s = encode(&ctx);
+        for (i, v) in s.iter().enumerate() {
+            prop_assert!((0.0..=1.0).contains(v), "feature {i} out of bounds: {v}");
+            prop_assert!(v.is_finite(), "feature {i} not finite");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn encoder_is_deterministic_and_injective_in_lambda() {
+    forall("encoder lambda", 50, 302, |rng| {
+        let prof = random_profile(rng);
+        let base = DecisionContext {
+            t: 0.0,
+            func: &prof,
+            ci: 400.0,
+            reuse_probs: [0.2, 0.4, 0.6, 0.8, 0.9],
+            lambda_carbon: rng.f64(),
+            idle_power_w: 1.0,
+            next_arrival_gap: None,
+        };
+        let a = encode(&base);
+        let b = encode(&base);
+        prop_assert!(a == b, "encoding not deterministic");
+        let mut other = base.clone();
+        other.lambda_carbon = (base.lambda_carbon + 0.31) % 1.0;
+        let c = encode(&other);
+        prop_assert!(a[9] != c[9], "lambda feature must move with lambda");
+        Ok(())
+    });
+}
+
+#[test]
+fn replay_never_exceeds_capacity_and_samples_valid() {
+    forall("replay invariants", 40, 303, |rng| {
+        let cap = 1 + rng.index(200);
+        let mut rb = ReplayBuffer::new(cap);
+        let n = rng.index(500);
+        for i in 0..n {
+            rb.push(Transition {
+                state: [i as f32; STATE_DIM],
+                action: (i % 5) as u8,
+                reward: -(i as f32),
+                next_state: [0.0; STATE_DIM],
+                done: i % 7 == 0,
+            });
+        }
+        prop_assert!(rb.len() <= cap, "len {} > capacity {cap}", rb.len());
+        prop_assert!(rb.len() == n.min(cap), "len wrong");
+        if rb.len() > 0 {
+            let batch = 1 + rng.index(64);
+            let mut s = vec![0.0; batch * STATE_DIM];
+            let mut a = vec![0i32; batch];
+            let mut r = vec![0.0f32; batch];
+            let mut ns = vec![0.0; batch * STATE_DIM];
+            let mut d = vec![0.0f32; batch];
+            rb.sample_into(rng, batch, &mut s, &mut a, &mut r, &mut ns, &mut d);
+            for b in 0..batch {
+                prop_assert!((0..5).contains(&a[b]), "action out of range");
+                prop_assert!(d[b] == 0.0 || d[b] == 1.0, "done not boolean");
+                // Sampled transitions must be among the retained (newest) ones.
+                let v = s[b * STATE_DIM] as usize;
+                prop_assert!(v < n, "sampled state from the future");
+                prop_assert!(
+                    n <= cap || v >= n - cap,
+                    "sampled an evicted transition ({v} with n={n} cap={cap})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn weights_roundtrip_random_params() {
+    forall("weights roundtrip", 25, 304, |rng| {
+        let dims = (
+            1 + rng.index(16),
+            1 + rng.index(96),
+            1 + rng.index(96),
+            1 + rng.index(8),
+        );
+        let mut p = QNetParams::zeros(dims);
+        for t in p.tensors_mut() {
+            for v in t.iter_mut() {
+                *v = rng.normal(0.0, 1.0) as f32;
+            }
+        }
+        let path = std::env::temp_dir().join(format!(
+            "lace_rl_prop_weights_{}.bin",
+            rng.next_u64()
+        ));
+        let path_str = path.to_str().unwrap();
+        weights::save_params(path_str, &p).map_err(|e| e.to_string())?;
+        let q = weights::load_params(path_str).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert!(p == q, "roundtrip mismatch for dims {dims:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn native_mlp_matches_f64_reference_on_random_nets() {
+    forall("native mlp numerics", 30, 305, |rng| {
+        let dims = (
+            1 + rng.index(16),
+            1 + rng.index(64),
+            1 + rng.index(64),
+            1 + rng.index(8),
+        );
+        let mut p = QNetParams::zeros(dims);
+        for t in p.tensors_mut() {
+            for v in t.iter_mut() {
+                *v = rng.normal(0.0, 0.5) as f32;
+            }
+        }
+        let x: Vec<f32> = (0..dims.0).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+
+        // f64 reference
+        let dense = |x: &[f64], w: &[f32], b: &[f32], n_out: usize, relu: bool| {
+            let mut y = vec![0.0f64; n_out];
+            for j in 0..n_out {
+                let mut acc = b[j] as f64;
+                for (i, &xi) in x.iter().enumerate() {
+                    acc += xi * w[i * n_out + j] as f64;
+                }
+                y[j] = if relu { acc.max(0.0) } else { acc };
+            }
+            y
+        };
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let h1 = dense(&x64, &p.w1, &p.b1, dims.1, true);
+        let h2 = dense(&h1, &p.w2, &p.b2, dims.2, true);
+        let want = dense(&h2, &p.w3, &p.b3, dims.3, false);
+
+        let mut mlp = NativeMlp::new(p);
+        let got = mlp.forward(&x);
+        for (g, w) in got.iter().zip(want.iter()) {
+            prop_assert!(
+                (*g as f64 - w).abs() < 1e-3 + w.abs() * 1e-4,
+                "mlp {g} vs ref {w} at dims {dims:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn argmax_consistent_with_forward() {
+    forall("argmax consistency", 40, 306, |rng| {
+        let mut p = QNetParams::zeros((STATE_DIM, 16, 16, 5));
+        for t in p.tensors_mut() {
+            for v in t.iter_mut() {
+                *v = rng.normal(0.0, 0.7) as f32;
+            }
+        }
+        let x: Vec<f32> = (0..STATE_DIM).map(|_| rng.f64() as f32).collect();
+        let mut mlp = NativeMlp::new(p);
+        let q = mlp.forward(&x).to_vec();
+        let a = mlp.argmax(&x);
+        let max = q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        prop_assert!(q[a] == max, "argmax {a} not maximal: {q:?}");
+        Ok(())
+    });
+}
