@@ -1,51 +1,111 @@
 //! Simulator/coordinator hot-path throughput: invocations simulated per
 //! second per policy, plus microbenchmarks of the per-invocation pieces
-//! (state encode, reuse-window probs, CI integration).
+//! (state encode, reuse-window probs, CI integration) and the parallel
+//! sweep harness speedup.
 //!
 //! This is the L3 perf-pass measurement target (DESIGN.md §8): ≥1M
 //! simulated invocations/s with a trivial policy; the native-DQN run shows
 //! the policy overhead on top.
+//!
+//! Every policy run constructs a **fresh** policy per timed iteration via a
+//! factory — stateful policies (LACE-RL reuse windows/observations) would
+//! otherwise warm up across iterations and skew the median.
+//!
+//! Writes `BENCH_sim.json` (median ns + invocations/s per label) so
+//! `scripts/bench_smoke.sh` can track the perf trajectory across PRs.
+//! Pass `--smoke` for a shrunken workload (CI-scale).
+
+use std::time::Instant;
 
 use lace_rl::carbon::intensity::CarbonTrace;
 use lace_rl::carbon::synth::{synth_region, Region};
 use lace_rl::energy::model::EnergyModel;
 use lace_rl::experiments::workload;
-use lace_rl::policy::{CarbonMin, FixedTimeout, KeepAlivePolicy};
+use lace_rl::policy::{CarbonMin, FixedTimeout, KeepAlivePolicy, LatencyMin};
 use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
 use lace_rl::simulator::reuse::ReuseWindow;
 use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
-use lace_rl::util::bench::{bench, bench_once, black_box};
+use lace_rl::util::bench::{bench, bench_once, black_box, Report};
 
 fn main() -> anyhow::Result<()> {
-    println!("== simulator throughput ==\n");
-    let trace = TraceGenerator::new(SynthConfig {
-        n_functions: 200,
-        duration_s: 7200.0,
-        target_invocations: 200_000,
-        seed: 7,
-        ..SynthConfig::default()
-    })
-    .generate();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("== simulator throughput{} ==\n", if smoke { " (smoke)" } else { "" });
+    let cfg = if smoke {
+        SynthConfig {
+            n_functions: 60,
+            duration_s: 1800.0,
+            target_invocations: 30_000,
+            seed: 7,
+            ..SynthConfig::default()
+        }
+    } else {
+        SynthConfig {
+            n_functions: 200,
+            duration_s: 7200.0,
+            target_invocations: 200_000,
+            seed: 7,
+            ..SynthConfig::default()
+        }
+    };
+    let trace = TraceGenerator::new(cfg).generate();
     let n = trace.len() as f64;
     println!("workload: {} invocations\n", trace.len());
     let ci = synth_region(Region::SolarHeavy, 1, 7);
     let energy = EnergyModel::default();
+    let samples = if smoke { 3 } else { 5 };
+    let mut report = Report::new();
 
-    let mut run_policy = |label: &str, policy: &mut dyn KeepAlivePolicy| {
-        let sim = Simulator::new(&trace, &ci, energy.clone(), SimConfig::default());
-        let s = bench_once(label, 5, || {
-            black_box(sim.run(policy).metrics.cold_starts);
-        });
-        println!(
-            "  -> {:.2}M invocations/s\n",
-            n / (s.median_ns / 1e9) / 1e6
-        );
+    {
+        let mut run_policy = |label: &str, factory: &dyn Fn() -> Box<dyn KeepAlivePolicy>| {
+            let sim = Simulator::new(&trace, &ci, energy.clone(), SimConfig::default());
+            let s = bench_once(label, samples, || {
+                // Fresh policy per iteration: no cross-iteration state.
+                let mut policy = factory();
+                black_box(sim.run(policy.as_mut()).metrics.cold_starts);
+            });
+            println!("  -> {:.2}M invocations/s\n", n / (s.median_ns / 1e9) / 1e6);
+            report.add(s);
+        };
+
+        run_policy("sim/fixed-60s", &|| Box::new(FixedTimeout::huawei()));
+        run_policy("sim/carbon-min", &|| Box::new(CarbonMin));
+        match workload::lace_rl_params() {
+            Ok(params) => {
+                run_policy("sim/lace-rl-native", &move || {
+                    Box::new(workload::lace_rl_from_params(&params))
+                });
+            }
+            Err(e) => println!("(skipping sim/lace-rl-native: no artifacts — {e})\n"),
+        }
+    }
+
+    // Parallel sweep harness: wall-clock of an 8-cell fixed-timeout sweep,
+    // sequential (1 thread) vs all cores.
+    println!("== parallel sweep (8 cells) ==\n");
+    let make_cells = || -> Vec<SweepCell> {
+        (0..8)
+            .map(|i| {
+                let secs = 1.0 + i as f64 * 8.0;
+                SweepCell::new(format!("fixed-{secs}"), SimConfig::default(), move || {
+                    Box::new(FixedTimeout::new(secs)) as BoxedPolicy
+                })
+            })
+            .collect()
     };
-
-    run_policy("sim/fixed-60s (full run)", &mut FixedTimeout::huawei());
-    run_policy("sim/carbon-min (full run)", &mut CarbonMin);
-    let mut lace = workload::lace_rl_policy()?;
-    run_policy("sim/lace-rl-native (full run)", &mut lace);
+    let seq_runner = SweepRunner::new(&trace, &ci, energy.clone()).with_threads(1);
+    let t0 = Instant::now();
+    black_box(seq_runner.run(make_cells()).len());
+    let seq_s = t0.elapsed().as_secs_f64();
+    let par_runner = SweepRunner::new(&trace, &ci, energy.clone());
+    let t0 = Instant::now();
+    black_box(par_runner.run(make_cells()).len());
+    let par_s = t0.elapsed().as_secs_f64();
+    println!(
+        "sweep/8-cells: sequential {seq_s:.3}s, parallel {par_s:.3}s on {} threads  -> {:.2}x speedup\n",
+        par_runner.threads(),
+        seq_s / par_s.max(1e-12),
+    );
 
     println!("== per-invocation pieces ==\n");
     // State encoding.
@@ -59,24 +119,31 @@ fn main() -> anyhow::Result<()> {
         idle_power_w: 1.2,
         next_arrival_gap: None,
     };
-    bench("encoder/encode", || {
+    report.add(bench("encoder/encode", || {
         black_box(lace_rl::rl::encoder::encode(black_box(&ctx)));
-    });
+    }));
 
     // Reuse-window probability evaluation (W=64, the hot default).
     let mut w = ReuseWindow::new(64);
     for i in 0..64 {
         w.push((i as f64 * 1.7) % 90.0);
     }
-    bench("reuse_window/probs(W=64)", || {
+    report.add(bench("reuse_window/probs(W=64)", || {
         black_box(w.probs());
-    });
+    }));
 
-    // CI integration across an hour boundary.
+    // CI integration across an hour boundary — O(1) prefix-sum path.
     let ct = CarbonTrace::new("b", 3600.0, (0..48).map(|i| 300.0 + i as f64).collect());
-    bench("carbon/integrate(90min)", || {
+    report.add(bench("carbon/integrate(90min)", || {
         black_box(ct.integrate(black_box(1800.0), black_box(7200.0)));
-    });
+    }));
+    // The same integral over a week-long span: O(1) means span length must
+    // not matter (the old step loop walked ~170 steps here).
+    report.add(bench("carbon/integrate(7days)", || {
+        black_box(ct.integrate(black_box(1800.0), black_box(604_800.0)));
+    }));
 
+    report.write("BENCH_sim.json")?;
+    println!("\nwrote BENCH_sim.json");
     Ok(())
 }

@@ -3,17 +3,34 @@
 /// A carbon-intensity trace: values in gCO₂eq/kWh sampled every `step_s`
 /// seconds starting at t=0. Lookups beyond the end wrap around (diurnal
 /// profiles repeat), matching the paper's hourly sampling (§IV-A3).
+///
+/// Construction precomputes a per-step prefix-sum table so range integrals
+/// ([`CarbonTrace::integrate`], [`CarbonTrace::mean_over`]) are O(1) in the
+/// span length — they sit on the simulator's per-invocation hot path, which
+/// previously paid an O(elapsed-steps) loop for every idle span
+/// (EXPERIMENTS.md §Perf iteration 2). Mutate `values` only through
+/// [`CarbonTrace::new`]; the table is derived state.
 #[derive(Debug, Clone)]
 pub struct CarbonTrace {
     pub step_s: f64,
     pub values: Vec<f64>,
     pub region: String,
+    /// `prefix[k]` = ∫ CI over the first `k` steps of one period,
+    /// in (gCO₂/kWh)·s; `prefix[values.len()]` is the full-period integral.
+    prefix: Vec<f64>,
 }
 
 impl CarbonTrace {
     pub fn new(region: &str, step_s: f64, values: Vec<f64>) -> Self {
         assert!(step_s > 0.0 && !values.is_empty());
-        CarbonTrace { step_s, values, region: region.to_string() }
+        let mut prefix = Vec::with_capacity(values.len() + 1);
+        let mut acc = 0.0;
+        prefix.push(0.0);
+        for &v in &values {
+            acc += v * step_s;
+            prefix.push(acc);
+        }
+        CarbonTrace { step_s, values, region: region.to_string(), prefix }
     }
 
     /// Constant CI — the ablation baseline (no temporal signal).
@@ -31,24 +48,44 @@ impl CarbonTrace {
         self.values[idx as usize]
     }
 
+    /// Antiderivative F(t) = ∫₀ᵗ CI(u) du of the periodic step function,
+    /// valid for any finite `t` (negative included). O(1) via the prefix
+    /// table: whole periods contribute `prefix[n]` each, the remainder is a
+    /// prefix lookup plus one partial step.
+    #[inline]
+    fn antiderivative(&self, t: f64) -> f64 {
+        let n = self.values.len();
+        let period = self.step_s * n as f64;
+        let cycles = (t / period).floor();
+        // rem ∈ [0, period); clamp the step index against FP edge cases
+        // where rem/step_s rounds up to n.
+        let rem = t - cycles * period;
+        let k = ((rem / self.step_s) as usize).min(n - 1);
+        let partial = self.prefix[k] + (rem - k as f64 * self.step_s) * self.values[k];
+        cycles * self.prefix[n] + partial
+    }
+
     /// Integral of CI over [t0, t1] in (gCO₂eq/kWh)·s — used to carbon-weight
-    /// idle energy that spans step boundaries.
+    /// idle energy that spans step boundaries. O(1) in the span length.
+    ///
+    /// Non-finite bounds (NaN/±inf) are a caller bug — the pre-prefix-sum
+    /// implementation looped forever on them; now they return 0.0 (and trip
+    /// a `debug_assert!` in debug builds).
     pub fn integrate(&self, t0: f64, t1: f64) -> f64 {
+        debug_assert!(
+            t0.is_finite() && t1.is_finite(),
+            "non-finite integrate bounds [{t0}, {t1}]"
+        );
+        if !t0.is_finite() || !t1.is_finite() {
+            return 0.0;
+        }
         if t1 <= t0 {
             return 0.0;
         }
-        let mut acc = 0.0;
-        let mut t = t0;
-        while t < t1 {
-            let step_end = ((t / self.step_s).floor() + 1.0) * self.step_s;
-            let seg_end = step_end.min(t1);
-            acc += self.at(t) * (seg_end - t);
-            t = seg_end;
-        }
-        acc
+        self.antiderivative(t1) - self.antiderivative(t0)
     }
 
-    /// Mean CI over [t0, t1].
+    /// Mean CI over [t0, t1]. O(1).
     pub fn mean_over(&self, t0: f64, t1: f64) -> f64 {
         if t1 <= t0 {
             return self.at(t0);
@@ -75,6 +112,22 @@ mod tests {
 
     fn two_step() -> CarbonTrace {
         CarbonTrace::new("t", 10.0, vec![100.0, 300.0])
+    }
+
+    /// Reference implementation: the original step-walking loop.
+    fn integrate_stepwise(c: &CarbonTrace, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut t = t0;
+        while t < t1 {
+            let step_end = ((t / c.step_s).floor() + 1.0) * c.step_s;
+            let seg_end = step_end.min(t1);
+            acc += c.at(t) * (seg_end - t);
+            t = seg_end;
+        }
+        acc
     }
 
     #[test]
@@ -120,5 +173,71 @@ mod tests {
         let c = two_step();
         assert_eq!(c.min(), 100.0);
         assert_eq!(c.max(), 300.0);
+    }
+
+    #[test]
+    fn prefix_integral_matches_stepwise_reference() {
+        // The O(1) form must agree with the original O(steps) walk across
+        // wraps, negative times, and sub-step spans.
+        let c = CarbonTrace::new("t", 7.0, vec![120.0, 80.0, 310.0, 45.0, 200.0]);
+        let probes = [
+            (0.0, 3.0),
+            (0.0, 7.0),
+            (6.9, 7.1),
+            (3.0, 40.0),
+            (-12.5, 9.25),
+            (-40.0, -1.0),
+            (17.3, 17.3001),
+            (0.0, 350.0), // 10 full periods
+            (1.0, 1.0),
+        ];
+        for (t0, t1) in probes {
+            let got = c.integrate(t0, t1);
+            let want = integrate_stepwise(&c, t0, t1);
+            assert!(
+                (got - want).abs() <= want.abs().max(1.0) * 1e-12,
+                "[{t0}, {t1}]: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn integrate_many_periods_is_exactly_periodic() {
+        let c = two_step();
+        let one_period = c.integrate(0.0, 20.0);
+        // 1e6 wrapped periods — O(1), and exact multiples of the period sum.
+        let many = c.integrate(0.0, 20.0 * 1e6);
+        assert!((many - one_period * 1e6).abs() < one_period * 1e6 * 1e-12);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn non_finite_bounds_integrate_to_zero() {
+        let c = two_step();
+        for (t0, t1) in [
+            (f64::NAN, 10.0),
+            (0.0, f64::NAN),
+            (f64::NEG_INFINITY, 10.0),
+            (0.0, f64::INFINITY),
+            (f64::NEG_INFINITY, f64::INFINITY),
+        ] {
+            assert_eq!(c.integrate(t0, t1), 0.0, "[{t0}, {t1}]");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite integrate bounds")]
+    fn non_finite_bounds_trip_debug_assert() {
+        two_step().integrate(0.0, f64::INFINITY);
+    }
+
+    #[test]
+    fn nan_mean_over_does_not_hang() {
+        // mean_over with reversed/NaN bounds degrades to a point lookup or
+        // a 0-length integral; it must terminate either way.
+        let c = two_step();
+        let v = c.mean_over(10.0, 5.0);
+        assert_eq!(v, c.at(10.0));
     }
 }

@@ -14,40 +14,57 @@ use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
 use crate::experiments::workload;
 use crate::policy::FixedTimeout;
-use crate::simulator::engine::{SimConfig, Simulator};
+use crate::simulator::engine::SimConfig;
+use crate::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
 
 pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
     let w = workload::build(seed, quick);
+    let params = workload::lace_rl_params()?;
+    let runner = SweepRunner::new(&w.general, &w.ci, w.energy.clone());
 
     // ---- 1. λ_idle sweep (paper §IV-F) ----
     println!("Ablation 1 — λ_idle sensitivity (Huawei static baseline, General workload):");
     println!("  {:>8} {:>18} {:>14}", "λ_idle", "keepalive (g)", "total (g)");
-    let mut base = None;
-    for lam in [0.1, 0.2, 0.5, 0.83] {
-        let energy = EnergyModel::with_lambda_idle(lam);
-        let sim = Simulator::new(&w.general, &w.ci, energy, SimConfig::default());
-        let m = sim.run(&mut FixedTimeout::huawei()).metrics;
+    const LAMBDAS: [f64; 4] = [0.1, 0.2, 0.5, 0.83];
+    let cells = LAMBDAS
+        .iter()
+        .map(|&lam| {
+            SweepCell::new(format!("λ_idle={lam}"), SimConfig::default(), || {
+                Box::new(FixedTimeout::huawei()) as BoxedPolicy
+            })
+            .with_energy(EnergyModel::with_lambda_idle(lam))
+        })
+        .collect();
+    let outcomes = runner.run(cells);
+    let base = outcomes[0].result.metrics.keepalive_carbon_g;
+    for (lam, o) in LAMBDAS.iter().zip(outcomes.iter()) {
+        let m = &o.result.metrics;
         println!("  {lam:>8.2} {:>18.3} {:>14.3}", m.keepalive_carbon_g, m.total_carbon_g());
-        if lam == 0.1 {
-            base = Some(m.keepalive_carbon_g);
-        } else if let Some(b) = base {
-            let ratio = m.keepalive_carbon_g / b;
-            anyhow::ensure!(
-                (ratio - lam / 0.1).abs() < 0.02 * (lam / 0.1),
-                "keep-alive carbon must scale linearly in λ_idle (got ×{ratio:.3} at λ={lam})"
-            );
-        }
+        let ratio = m.keepalive_carbon_g / base;
+        anyhow::ensure!(
+            (ratio - lam / 0.1).abs() < 0.02 * (lam / 0.1),
+            "keep-alive carbon must scale linearly in λ_idle (got ×{ratio:.3} at λ={lam})"
+        );
     }
     println!("  (linear scaling verified — λ_idle=0.2 is conservative vs measured 0.21–0.83)");
 
     // ---- 2. Reuse-window size ----
     println!("\nAblation 2 — reuse-window W (LACE-RL state quality):");
     println!("  {:>6} {:>12} {:>18}", "W", "cold starts", "keepalive (g)");
-    for window in [8usize, 32, 64, 256] {
-        let mut lace = workload::lace_rl_policy()?;
-        let cfg = SimConfig { reuse_window: window, ..SimConfig::default() };
-        let sim = Simulator::new(&w.general, &w.ci, w.energy.clone(), cfg);
-        let m = sim.run(&mut lace).metrics;
+    const WINDOWS: [usize; 4] = [8, 32, 64, 256];
+    let cells = WINDOWS
+        .iter()
+        .map(|&window| {
+            let p = params.clone();
+            SweepCell::new(
+                format!("W={window}"),
+                SimConfig { reuse_window: window, ..SimConfig::default() },
+                move || Box::new(workload::lace_rl_from_params(&p)) as BoxedPolicy,
+            )
+        })
+        .collect();
+    for (window, o) in WINDOWS.iter().zip(runner.run(cells).iter()) {
+        let m = &o.result.metrics;
         println!("  {window:>6} {:>12} {:>18.3}", m.cold_starts, m.keepalive_carbon_g);
     }
 
@@ -55,14 +72,18 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
     println!("\nAblation 3 — temporal carbon awareness:");
     let mean_ci = w.ci.values.iter().sum::<f64>() / w.ci.values.len() as f64;
     let flat = CarbonTrace::constant(mean_ci);
-    let mut lace = workload::lace_rl_policy()?;
-    let aware = workload::evaluate(&w.general, &w.ci, &w.energy, &mut lace, 0.5, false);
-    let mut lace = workload::lace_rl_policy()?;
-    let blind = {
-        let cfg = SimConfig::default();
-        let sim = Simulator::new(&w.general, &flat, w.energy.clone(), cfg);
-        sim.run(&mut lace).metrics
-    };
+    let p_aware = params.clone();
+    let p_blind = params;
+    let outcomes = runner.run(vec![
+        SweepCell::new("ci-aware", SimConfig::default(), move || {
+            Box::new(workload::lace_rl_from_params(&p_aware)) as BoxedPolicy
+        }),
+        SweepCell::new("ci-blind", SimConfig::default(), move || {
+            Box::new(workload::lace_rl_from_params(&p_blind)) as BoxedPolicy
+        })
+        .with_ci(&flat),
+    ]);
+    let (aware, blind) = (&outcomes[0].result.metrics, &outcomes[1].result.metrics);
     println!(
         "  varying CI : cold={} keepalive={:.3}g",
         aware.cold_starts, aware.keepalive_carbon_g

@@ -65,6 +65,7 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
 }
 
 /// Snapshot of a decision context (owned, replayable).
+#[derive(Clone)]
 pub struct CtxSnapshot {
     pub t: f64,
     pub func: u32,
@@ -73,16 +74,23 @@ pub struct CtxSnapshot {
     pub idle_power_w: f64,
 }
 
+/// Collect the decision-context stream via a sweep cell. The recorder
+/// policy is constructed inside the runner, so it streams into shared
+/// storage the caller keeps a handle on.
 fn collect_contexts(w: &workload::Workload, trace: &crate::trace::model::Trace) -> Vec<CtxSnapshot> {
+    use crate::simulator::engine::SimConfig;
+    use crate::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
+    use std::sync::{Arc, Mutex};
+
     struct Collector {
-        out: Vec<CtxSnapshot>,
+        out: Arc<Mutex<Vec<CtxSnapshot>>>,
     }
     impl KeepAlivePolicy for Collector {
         fn name(&self) -> &str {
             "collector"
         }
         fn decide(&mut self, ctx: &crate::policy::DecisionContext) -> usize {
-            self.out.push(CtxSnapshot {
+            self.out.lock().unwrap().push(CtxSnapshot {
                 t: ctx.t,
                 func: ctx.func.id,
                 ci: ctx.ci,
@@ -92,9 +100,15 @@ fn collect_contexts(w: &workload::Workload, trace: &crate::trace::model::Trace) 
             4
         }
     }
-    let mut c = Collector { out: Vec::with_capacity(trace.len()) };
-    workload::evaluate(trace, &w.ci, &w.energy, &mut c, 0.5, false);
-    c.out
+
+    let out = Arc::new(Mutex::new(Vec::with_capacity(trace.len())));
+    let sink = out.clone();
+    let cells = vec![SweepCell::new("collect-contexts", SimConfig::default(), move || {
+        Box::new(Collector { out: sink.clone() }) as BoxedPolicy
+    })];
+    SweepRunner::new(trace, &w.ci, w.energy.clone()).run(cells);
+    let mut guard = out.lock().unwrap();
+    std::mem::take(&mut *guard)
 }
 
 fn decide_ctx(

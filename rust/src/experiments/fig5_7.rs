@@ -4,8 +4,10 @@
 
 use crate::experiments::{results_dir, workload};
 use crate::metrics::Comparison;
-use crate::policy::{CarbonMin, Dpso, FixedTimeout, LatencyMin};
 use crate::policy::dpso::DpsoConfig;
+use crate::policy::{CarbonMin, Dpso, FixedTimeout, LatencyMin};
+use crate::simulator::engine::SimConfig;
+use crate::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
 use crate::util::csv::Writer;
 
 pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
@@ -49,22 +51,32 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
 }
 
 /// Run the standard five-policy comparison (Oracle excluded here; it gets
-/// its own Table III experiment).
+/// its own Table III experiment). All five cells execute in parallel on the
+/// sweep runner; results are deterministic and ordered.
 pub fn compare(
     trace: &crate::trace::model::Trace,
     w: &workload::Workload,
     lambda: f64,
 ) -> anyhow::Result<Comparison> {
+    let params = workload::lace_rl_params()?;
+    let cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
+    let cells = vec![
+        SweepCell::new("latency-min", cfg.clone(), || Box::new(LatencyMin) as BoxedPolicy),
+        SweepCell::new("carbon-min", cfg.clone(), || Box::new(CarbonMin) as BoxedPolicy),
+        SweepCell::new("huawei-60s", cfg.clone(), || {
+            Box::new(FixedTimeout::huawei()) as BoxedPolicy
+        }),
+        SweepCell::new("dpso-ecolife", cfg.clone(), || {
+            Box::new(Dpso::new(DpsoConfig::default())) as BoxedPolicy
+        }),
+        SweepCell::new("lace-rl", cfg, move || {
+            Box::new(workload::lace_rl_from_params(&params)) as BoxedPolicy
+        }),
+    ];
+    let runner = SweepRunner::new(trace, &w.ci, w.energy.clone());
     let mut cmp = Comparison::new("general");
-    let mut lat = LatencyMin;
-    cmp.add("latency-min", workload::evaluate(trace, &w.ci, &w.energy, &mut lat, lambda, false));
-    let mut car = CarbonMin;
-    cmp.add("carbon-min", workload::evaluate(trace, &w.ci, &w.energy, &mut car, lambda, false));
-    let mut hw = FixedTimeout::huawei();
-    cmp.add("huawei-60s", workload::evaluate(trace, &w.ci, &w.energy, &mut hw, lambda, false));
-    let mut dpso = Dpso::new(DpsoConfig::default());
-    cmp.add("dpso-ecolife", workload::evaluate(trace, &w.ci, &w.energy, &mut dpso, lambda, false));
-    let mut lace = workload::lace_rl_policy()?;
-    cmp.add("lace-rl", workload::evaluate(trace, &w.ci, &w.energy, &mut lace, lambda, false));
+    for outcome in runner.run(cells) {
+        cmp.add(&outcome.label, outcome.result.metrics);
+    }
     Ok(cmp)
 }

@@ -40,13 +40,22 @@ pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
         "fig10" | "fig10a" | "fig10b" => fig10::run(seed, quick),
         "ablation" => ablation::run(seed, quick),
         "all" => {
+            // Per-experiment + total wall-clock: the number EXPERIMENTS.md
+            // §Perf tracks across optimization iterations.
+            let t_all = std::time::Instant::now();
             for e in [
                 "fig1", "fig2", "fig3", "table2", "fig5", "fig8", "table3", "cost",
                 "fig10", "ablation",
             ] {
                 println!("\n================ experiment {e} ================");
+                let t0 = std::time::Instant::now();
                 run(e, seed, quick)?;
+                println!("[{e} done in {:.2}s]", t0.elapsed().as_secs_f64());
             }
+            println!(
+                "\n================ experiment all: {:.2}s total ================",
+                t_all.elapsed().as_secs_f64()
+            );
             Ok(())
         }
         other => anyhow::bail!("unknown experiment '{other}'; known: {ALL:?} or 'all'"),

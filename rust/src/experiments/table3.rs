@@ -4,6 +4,8 @@
 
 use crate::experiments::workload;
 use crate::policy::Oracle;
+use crate::simulator::engine::SimConfig;
+use crate::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
 use crate::trace::model::Trace;
 
 pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
@@ -11,17 +13,37 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
     let slice_s = 2.0 * 3600.0;
     let general = time_slice(&w.general, slice_s);
     let long_tailed = time_slice(&w.long_tailed, slice_s);
+    let params = workload::lace_rl_params()?;
+
+    // All four (case × policy) runs as one parallel sweep; the Oracle cells
+    // enable the clairvoyant next-arrival gap, LACE-RL runs blind.
+    let oracle_cfg = SimConfig { provide_oracle_gap: true, ..SimConfig::default() };
+    let mut cells = Vec::new();
+    for (case, trace) in [("General", &general), ("Long-tailed", &long_tailed)] {
+        cells.push(
+            SweepCell::new(format!("{case}/oracle"), oracle_cfg.clone(), || {
+                Box::new(Oracle) as BoxedPolicy
+            })
+            .with_trace(trace),
+        );
+        let p = params.clone();
+        cells.push(
+            SweepCell::new(format!("{case}/lace-rl"), SimConfig::default(), move || {
+                Box::new(workload::lace_rl_from_params(&p)) as BoxedPolicy
+            })
+            .with_trace(trace),
+        );
+    }
+    let outcomes = SweepRunner::new(&w.general, &w.ci, w.energy.clone()).run(cells);
 
     println!("Table III — LACE-RL vs Oracle (two-hour slice):\n");
     println!(
         "{:<12} {:<28} {:>10} {:>10} {:>12}",
         "case", "metric", "Oracle", "LACE-RL", "degradation"
     );
-    for (case, trace) in [("General", &general), ("Long-tailed", &long_tailed)] {
-        let mut oracle = Oracle;
-        let om = workload::evaluate(trace, &w.ci, &w.energy, &mut oracle, 0.5, true);
-        let mut lace = workload::lace_rl_policy()?;
-        let lm = workload::evaluate(trace, &w.ci, &w.energy, &mut lace, 0.5, false);
+    for (i, case) in ["General", "Long-tailed"].into_iter().enumerate() {
+        let om = &outcomes[2 * i].result.metrics;
+        let lm = &outcomes[2 * i + 1].result.metrics;
 
         let deg = |o: f64, l: f64| {
             if o <= 0.0 { 0.0 } else { 100.0 * (l - o) / o }
@@ -53,9 +75,9 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
             "{:<12} {:<28} {:>10.1} {:>10.1} {:>11.3}%",
             case,
             "Blended objective (Eq. 5)",
-            blended(&om),
-            blended(&lm),
-            deg(blended(&om), blended(&lm))
+            blended(om),
+            blended(lm),
+            deg(blended(om), blended(lm))
         );
     }
     println!(

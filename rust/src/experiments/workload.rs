@@ -81,17 +81,30 @@ pub fn evaluate(
     metrics
 }
 
+/// Load the trained Q-network weights (or init weights when untrained)
+/// once; sweep-cell factories clone these instead of re-reading artifacts
+/// from disk per cell.
+pub fn lace_rl_params() -> anyhow::Result<crate::rl::qnet::QNetParams> {
+    let artifacts =
+        crate::runtime::ArtifactSet::open(&crate::runtime::artifacts::default_dir())?;
+    artifacts.best_params()
+}
+
 /// Load LACE-RL with trained weights (or init weights when untrained) on
 /// the native fast path.
 pub fn lace_rl_policy() -> anyhow::Result<
     crate::policy::lace_rl::LaceRlPolicy<crate::policy::native_mlp::NativeMlp>,
 > {
-    let artifacts =
-        crate::runtime::ArtifactSet::open(&crate::runtime::artifacts::default_dir())?;
-    let params = artifacts.best_params()?;
-    Ok(crate::policy::lace_rl::LaceRlPolicy::new(
-        crate::policy::native_mlp::NativeMlp::new(params),
-    ))
+    Ok(lace_rl_from_params(&lace_rl_params()?))
+}
+
+/// Build a fresh LACE-RL instance from already-loaded weights.
+pub fn lace_rl_from_params(
+    params: &crate::rl::qnet::QNetParams,
+) -> crate::policy::lace_rl::LaceRlPolicy<crate::policy::native_mlp::NativeMlp> {
+    crate::policy::lace_rl::LaceRlPolicy::new(
+        crate::policy::native_mlp::NativeMlp::new(params.clone()),
+    )
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@
 //! | [`carbon`] | grid carbon-intensity traces (synthetic duck-curve archetypes + loader) |
 //! | [`energy`] | the paper's energy/carbon accounting model (Eq. 1–4) + FunctionBench Table II calibration |
 //! | [`simulator`] | event-driven cluster: pods, warm pool, keep-alive expiry, metrics |
+//! | [`simulator::parallel`] | sweep harness: policy×config cells across scoped threads, deterministic order, bit-identical to sequential |
 //! | [`policy`] | the six keep-alive policies behind one trait |
 //! | [`rl`] | state encoder, replay buffer, ε-greedy agent, Rust-side DQN trainer, weight I/O |
 //! | [`runtime`] | PJRT client wrapper: load HLO text artifacts, compile, execute |

@@ -113,6 +113,10 @@ impl<'a> Simulator<'a> {
 
         let mut t_end: f64 = 0.0;
 
+        // Scratch buffer for just-expired decisions, reused across
+        // invocations — the hot loop allocates nothing per arrival.
+        let mut expired: Vec<(Pending, f64, f64, f64)> = Vec::new(); // (pending, warm_until, idle_carbon, span)
+
         for (idx, inv) in trace.invocations.iter().enumerate() {
             let f = inv.func as usize;
             let prof = &trace.functions[f];
@@ -126,8 +130,8 @@ impl<'a> Simulator<'a> {
             }
 
             // (2) Lazily expire pods; remember the latest expiry for
-            //     cold-penalty attribution.
-            let mut expired: Vec<(Pending, f64, f64, f64)> = Vec::new(); // (pending, warm_until, idle_carbon, span)
+            //     cold-penalty attribution. (`expired` is drained below, so
+            //     it is always empty here.)
             let fpods = &mut pods[f];
             let mut i = 0;
             while i < fpods.len() {
@@ -204,7 +208,7 @@ impl<'a> Simulator<'a> {
                     .iter()
                     .map(|(_, wu, _, _)| *wu)
                     .fold(f64::NEG_INFINITY, f64::max);
-                for (p, warm_until, idle_carbon, span) in expired {
+                for (p, warm_until, idle_carbon, span) in expired.drain(..) {
                     let penalty = if is_cold && warm_until == latest {
                         cold_lat
                     } else {

@@ -6,8 +6,10 @@
 
 pub mod engine;
 pub mod metrics;
+pub mod parallel;
 pub mod pod;
 pub mod reuse;
 
 pub use engine::{SimConfig, SimResult, Simulator};
 pub use metrics::SimMetrics;
+pub use parallel::{BoxedPolicy, SweepCell, SweepOutcome, SweepRunner};

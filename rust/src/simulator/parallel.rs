@@ -1,0 +1,312 @@
+//! Parallel simulation-sweep harness (EXPERIMENTS.md §Perf iteration 2).
+//!
+//! The paper's evaluation (§IV) sweeps six policies × multiple λ_carbon
+//! points × seeds over ≈1M-invocation traces — embarrassingly parallel
+//! across configurations, exactly the shape dslab-faas exploits for
+//! serverless simulation. [`SweepRunner`] fans a list of [`SweepCell`]s
+//! (policy factory + [`SimConfig`], with optional per-cell trace / CI /
+//! energy-model overrides) across a scoped std thread pool and returns
+//! results in **deterministic cell order**.
+//!
+//! Determinism: every cell gets a *fresh* policy from its factory and runs
+//! a fully independent [`Simulator`] over shared immutable inputs, so each
+//! cell's [`SimMetrics`](crate::simulator::SimMetrics) are bit-identical to
+//! a sequential `Simulator::run` of the same cell — thread scheduling can
+//! reorder *execution*, never *results* (asserted by
+//! `rust/tests/property_parallel.rs`). No new dependencies: work stealing
+//! is an atomic cursor over the cell list, `std::thread::scope` keeps the
+//! borrows lifetimes-clean.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::energy::model::EnergyModel;
+use crate::policy::KeepAlivePolicy;
+use crate::simulator::engine::{SimConfig, SimResult, Simulator};
+use crate::trace::model::Trace;
+
+/// A heap-allocated policy that may cross the worker→caller thread boundary.
+pub type BoxedPolicy = Box<dyn KeepAlivePolicy + Send>;
+
+/// Builds a fresh policy instance for one sweep cell. Called exactly once
+/// per cell, on the worker thread that executes it — stateful policies
+/// (LACE-RL reuse windows, DPSO swarms, recorders) never leak state across
+/// cells.
+pub type PolicyFactory<'a> = Box<dyn Fn() -> BoxedPolicy + Send + Sync + 'a>;
+
+/// One sweep cell: a policy factory plus its simulation config, with
+/// optional overrides of the runner's shared trace / CI / energy model
+/// (used by the ablation and Table III sweeps).
+pub struct SweepCell<'a> {
+    pub label: String,
+    pub cfg: SimConfig,
+    pub factory: PolicyFactory<'a>,
+    pub trace: Option<&'a Trace>,
+    pub ci: Option<&'a CarbonTrace>,
+    pub energy: Option<EnergyModel>,
+}
+
+impl<'a> SweepCell<'a> {
+    pub fn new(
+        label: impl Into<String>,
+        cfg: SimConfig,
+        factory: impl Fn() -> BoxedPolicy + Send + Sync + 'a,
+    ) -> Self {
+        SweepCell {
+            label: label.into(),
+            cfg,
+            factory: Box::new(factory),
+            trace: None,
+            ci: None,
+            energy: None,
+        }
+    }
+
+    /// Run this cell on its own trace (Table III's per-case slices).
+    pub fn with_trace(mut self, trace: &'a Trace) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Run this cell against a different CI trace (carbon-blind ablation).
+    pub fn with_ci(mut self, ci: &'a CarbonTrace) -> Self {
+        self.ci = Some(ci);
+        self
+    }
+
+    /// Run this cell under a different energy model (λ_idle sweep).
+    pub fn with_energy(mut self, energy: EnergyModel) -> Self {
+        self.energy = Some(energy);
+        self
+    }
+}
+
+/// One cell's result, in the cell's original list position.
+pub struct SweepOutcome {
+    pub label: String,
+    pub result: SimResult,
+    /// The policy after the run — lets callers recover trained/recorded
+    /// state (e.g. the cost experiment's context collector).
+    pub policy: BoxedPolicy,
+}
+
+/// Executes sweep cells across a scoped thread pool.
+///
+/// ```ignore
+/// // (doctests don't inherit the xla rpath link flags; the unit tests
+/// // below exercise this exact shape)
+/// # use lace_rl::simulator::parallel::{SweepCell, SweepRunner};
+/// # use lace_rl::simulator::SimConfig;
+/// # use lace_rl::policy::FixedTimeout;
+/// # use lace_rl::energy::model::EnergyModel;
+/// # let (trace, ci) = unimplemented!();
+/// let runner = SweepRunner::new(&trace, &ci, EnergyModel::default());
+/// let cells = vec![
+///     SweepCell::new("huawei-60s", SimConfig::default(), || {
+///         Box::new(FixedTimeout::huawei())
+///     }),
+/// ];
+/// let outcomes = runner.run(cells); // same order as `cells`
+/// ```
+pub struct SweepRunner<'a> {
+    trace: &'a Trace,
+    ci: &'a CarbonTrace,
+    energy: EnergyModel,
+    threads: usize,
+}
+
+impl<'a> SweepRunner<'a> {
+    /// A runner over shared inputs, sized to the machine
+    /// (`std::thread::available_parallelism`). Override with
+    /// [`with_threads`](Self::with_threads) or the `LACE_SWEEP_THREADS`
+    /// env var (`LACE_SWEEP_THREADS=1` forces sequential execution for
+    /// debugging/CI determinism triage).
+    pub fn new(trace: &'a Trace, ci: &'a CarbonTrace, energy: EnergyModel) -> Self {
+        let threads = std::env::var("LACE_SWEEP_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        SweepRunner { trace, ci, energy, threads }
+    }
+
+    /// Pin the worker count (clamped to ≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute every cell; results come back in the cells' original order
+    /// regardless of which worker finished when.
+    pub fn run(&self, cells: Vec<SweepCell<'a>>) -> Vec<SweepOutcome> {
+        let n = cells.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Vec<Mutex<Option<SweepOutcome>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let workers = self.threads.min(n);
+        let cells = &cells;
+        let slots_ref = &slots;
+        let cursor_ref = &cursor;
+
+        let work = move || loop {
+            let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let cell = &cells[i];
+            let mut policy = (cell.factory)();
+            let sim = Simulator::new(
+                cell.trace.unwrap_or(self.trace),
+                cell.ci.unwrap_or(self.ci),
+                cell.energy.clone().unwrap_or_else(|| self.energy.clone()),
+                cell.cfg.clone(),
+            );
+            let result = sim.run(policy.as_mut());
+            *slots_ref[i].lock().unwrap() =
+                Some(SweepOutcome { label: cell.label.clone(), result, policy });
+        };
+
+        if workers == 1 {
+            // Inline — no thread overhead for single-cell/forced-sequential
+            // sweeps, same code path as the workers.
+            work();
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(work.clone());
+                }
+            });
+        }
+
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("every sweep cell executes"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::fixed::FixedTimeout;
+    use crate::policy::{CarbonMin, LatencyMin};
+    use crate::trace::synth::{SynthConfig, TraceGenerator};
+
+    fn small_trace(seed: u64) -> Trace {
+        TraceGenerator::new(SynthConfig::small(seed)).generate()
+    }
+
+    fn fixed_cells<'a>(n: usize) -> Vec<SweepCell<'a>> {
+        (0..n)
+            .map(|i| {
+                let secs = 1.0 + i as f64 * 7.0;
+                SweepCell::new(format!("fixed-{secs}"), SimConfig::default(), move || {
+                    Box::new(FixedTimeout::new(secs)) as BoxedPolicy
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn results_keep_cell_order() {
+        let trace = small_trace(1);
+        let ci = CarbonTrace::constant(300.0);
+        let runner = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(4);
+        let outcomes = runner.run(fixed_cells(9));
+        assert_eq!(outcomes.len(), 9);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.label, format!("fixed-{}", 1.0 + i as f64 * 7.0));
+            assert_eq!(o.result.metrics.invocations as usize, trace.len());
+        }
+    }
+
+    #[test]
+    fn parallel_matches_single_thread_bitwise() {
+        let trace = small_trace(2);
+        let ci = CarbonTrace::constant(300.0);
+        let seq = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(1);
+        let par = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(8);
+        let a = seq.run(fixed_cells(6));
+        let b = par.run(fixed_cells(6));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.result.metrics.cold_starts, y.result.metrics.cold_starts);
+            // Bit-identical, not approximately equal:
+            assert_eq!(
+                x.result.metrics.keepalive_carbon_g.to_bits(),
+                y.result.metrics.keepalive_carbon_g.to_bits()
+            );
+            assert_eq!(
+                x.result.metrics.total_carbon_g().to_bits(),
+                y.result.metrics.total_carbon_g().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn per_cell_overrides_apply() {
+        let trace = small_trace(3);
+        let short = Trace {
+            functions: trace.functions.clone(),
+            invocations: trace.invocations.iter().take(10).copied().collect(),
+        };
+        let ci = CarbonTrace::constant(300.0);
+        let flat = CarbonTrace::constant(600.0);
+        let runner = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(2);
+        let cells = vec![
+            SweepCell::new("base", SimConfig::default(), || {
+                Box::new(FixedTimeout::huawei()) as BoxedPolicy
+            }),
+            SweepCell::new("short-trace", SimConfig::default(), || {
+                Box::new(FixedTimeout::huawei()) as BoxedPolicy
+            })
+            .with_trace(&short),
+            SweepCell::new("double-ci", SimConfig::default(), || {
+                Box::new(FixedTimeout::huawei()) as BoxedPolicy
+            })
+            .with_ci(&flat),
+            SweepCell::new("hot-idle", SimConfig::default(), || {
+                Box::new(FixedTimeout::huawei()) as BoxedPolicy
+            })
+            .with_energy(EnergyModel::with_lambda_idle(0.8)),
+        ];
+        let o = runner.run(cells);
+        assert_eq!(o[0].result.metrics.invocations as usize, trace.len());
+        assert_eq!(o[1].result.metrics.invocations, 10);
+        // Doubling CI doubles keep-alive carbon; 4× λ_idle quadruples it.
+        let base = o[0].result.metrics.keepalive_carbon_g;
+        assert!((o[2].result.metrics.keepalive_carbon_g / base - 2.0).abs() < 1e-9);
+        assert!((o[3].result.metrics.keepalive_carbon_g / base - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stateful_policy_returned_in_outcome() {
+        let trace = small_trace(4);
+        let ci = CarbonTrace::constant(300.0);
+        let runner = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(2);
+        let cells = vec![
+            SweepCell::new("lat", SimConfig::default(), || Box::new(LatencyMin) as BoxedPolicy),
+            SweepCell::new("car", SimConfig::default(), || Box::new(CarbonMin) as BoxedPolicy),
+        ];
+        let o = runner.run(cells);
+        assert_eq!(o[0].policy.name(), "latency-min");
+        assert_eq!(o[1].policy.name(), "carbon-min");
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        let trace = small_trace(5);
+        let ci = CarbonTrace::constant(300.0);
+        let runner = SweepRunner::new(&trace, &ci, EnergyModel::default());
+        assert!(runner.run(Vec::new()).is_empty());
+    }
+}

@@ -3,9 +3,13 @@
 //! `cargo bench` targets under `benches/` use `harness = false` and call
 //! into this module: warmup, calibrated iteration counts, median/mean/p99
 //! over sample batches, and criterion-style output lines that
-//! `bench_output.txt` captures.
+//! `bench_output.txt` captures. [`Report`] additionally exports the
+//! summaries machine-readably (`BENCH_sim.json`) so the perf trajectory is
+//! tracked across PRs (EXPERIMENTS.md §Perf).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One benchmark measurement summary (nanoseconds per iteration).
 #[derive(Debug, Clone)]
@@ -131,6 +135,59 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Collects [`Summary`]s and writes them as one JSON document keyed by
+/// bench label: `{"schema": 1, "benches": {label: {median_ns, ...,
+/// throughput_per_s}}}`. CI (`scripts/bench_smoke.sh`) diffs these across
+/// PRs.
+#[derive(Debug, Default)]
+pub struct Report {
+    entries: Vec<Summary>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    pub fn add(&mut self, summary: Summary) {
+        self.entries.push(summary);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let benches = self
+            .entries
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    Json::obj(vec![
+                        ("median_ns", Json::Num(s.median_ns)),
+                        ("mean_ns", Json::Num(s.mean_ns)),
+                        ("p99_ns", Json::Num(s.p99_ns)),
+                        ("min_ns", Json::Num(s.min_ns)),
+                        ("throughput_per_s", Json::Num(s.throughput_per_s)),
+                        ("samples", Json::Num(s.samples as f64)),
+                        ("iters_per_sample", Json::Num(s.iters_per_sample as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("benches", Json::Obj(benches)),
+        ])
+    }
+
+    /// Write the report to `path` (e.g. `BENCH_sim.json`).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +214,26 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50µs");
         assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
         assert_eq!(fmt_ns(3_000_000_000.0), "3.000s");
+    }
+
+    #[test]
+    fn report_round_trips_as_json() {
+        let mut r = Report::new();
+        r.add(Summary {
+            name: "sim/fixed-60s".to_string(),
+            samples: 5,
+            iters_per_sample: 1,
+            mean_ns: 1000.0,
+            median_ns: 900.0,
+            p99_ns: 1500.0,
+            min_ns: 800.0,
+            throughput_per_s: 1e9 / 900.0,
+        });
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(1));
+        let entry = j.get("benches").unwrap().get("sim/fixed-60s").unwrap();
+        assert_eq!(entry.get("median_ns").unwrap().as_f64(), Some(900.0));
+        assert!(entry.get("throughput_per_s").unwrap().as_f64().unwrap() > 1e6);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! Property: the parallel sweep harness is a pure speedup — for every cell,
+//! [`SweepRunner`] must return metrics **bit-identical** to a sequential
+//! `Simulator::run` with an identically-constructed fresh policy. Thread
+//! scheduling may reorder execution, never results.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::{CarbonMin, FixedTimeout, LatencyMin};
+use lace_rl::prop_assert;
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+/// The policy grid each sweep runs: every factory builds a *fresh* policy,
+/// so sequential reference and parallel cell start from identical state.
+fn policy_grid() -> Vec<(&'static str, Box<dyn Fn() -> BoxedPolicy + Send + Sync>)> {
+    vec![
+        ("huawei-60s", Box::new(|| Box::new(FixedTimeout::huawei()) as BoxedPolicy)),
+        ("fixed-10s", Box::new(|| Box::new(FixedTimeout::new(10.0)) as BoxedPolicy)),
+        ("latency-min", Box::new(|| Box::new(LatencyMin) as BoxedPolicy)),
+        ("carbon-min", Box::new(|| Box::new(CarbonMin) as BoxedPolicy)),
+        ("dpso-ecolife", Box::new(|| Box::new(Dpso::new(DpsoConfig::default())) as BoxedPolicy)),
+    ]
+}
+
+fn small_trace(rng: &mut Rng) -> lace_rl::trace::model::Trace {
+    let cfg = SynthConfig {
+        n_functions: 10 + rng.index(30),
+        duration_s: 600.0 + rng.f64() * 1200.0,
+        target_invocations: 2_000 + rng.index(6_000),
+        seed: rng.next_u64(),
+        ..SynthConfig::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+#[test]
+fn sweep_results_bit_identical_to_sequential() {
+    // ≥3 seeds: forall runs 4 independent randomized cases.
+    forall("parallel sweep == sequential run", 4, 113, |rng| {
+        let trace = small_trace(rng);
+        let ci = match rng.index(2) {
+            0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+            _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+        };
+        let energy = EnergyModel::default();
+        let lambda = *rng.choice(&[0.2, 0.5, 0.8]);
+        let window = *rng.choice(&[32usize, 64]);
+        let cfg = SimConfig {
+            lambda_carbon: lambda,
+            reuse_window: window,
+            ..SimConfig::default()
+        };
+
+        // Sequential reference: one fresh policy per cell, plain Simulator.
+        let grid = policy_grid();
+        let mut reference = Vec::new();
+        for (_, factory) in &grid {
+            let mut policy = factory();
+            let sim = Simulator::new(&trace, &ci, energy.clone(), cfg.clone());
+            reference.push(sim.run(policy.as_mut()).metrics);
+        }
+
+        // Parallel sweep over the same grid.
+        let cells = policy_grid()
+            .into_iter()
+            .map(|(label, factory)| SweepCell::new(label, cfg.clone(), factory))
+            .collect();
+        let outcomes =
+            SweepRunner::new(&trace, &ci, energy.clone()).with_threads(8).run(cells);
+
+        prop_assert!(outcomes.len() == reference.len(), "cell count mismatch");
+        for ((name, _), (seq, out)) in
+            grid.iter().zip(reference.iter().zip(outcomes.iter()))
+        {
+            let par = &out.result.metrics;
+            prop_assert!(out.label == *name, "order broken: {} vs {name}", out.label);
+            prop_assert!(
+                par.cold_starts == seq.cold_starts && par.warm_starts == seq.warm_starts,
+                "{name}: cold/warm {}/{} vs {}/{}",
+                par.cold_starts,
+                par.warm_starts,
+                seq.cold_starts,
+                seq.warm_starts
+            );
+            prop_assert!(par.invocations == seq.invocations, "{name}: invocations");
+            // Carbon, latency and idle accounting must match to the bit —
+            // parallelism may not perturb a single FP operation.
+            for (field, a, b) in [
+                ("keepalive_carbon_g", par.keepalive_carbon_g, seq.keepalive_carbon_g),
+                ("exec_carbon_g", par.exec_carbon_g, seq.exec_carbon_g),
+                ("cold_carbon_g", par.cold_carbon_g, seq.cold_carbon_g),
+                ("cold_latency_s", par.cold_latency_s, seq.cold_latency_s),
+                ("idle_pod_seconds", par.idle_pod_seconds, seq.idle_pod_seconds),
+                ("wasted_idle_seconds", par.wasted_idle_seconds, seq.wasted_idle_seconds),
+                ("latency_sum", par.latency.sum, seq.latency.sum),
+            ] {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{name}: {field} differs: {a:e} vs {b:e}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sweep_deterministic_across_repeat_runs() {
+    // Same cells, run twice through the pool: identical outcomes (the
+    // atomic work-stealing cursor must not leak scheduling into results).
+    let trace = TraceGenerator::new(SynthConfig::small(9)).generate();
+    let ci = synth_region(Region::FossilHeavy, 1, 9);
+    let runner = SweepRunner::new(&trace, &ci, EnergyModel::default());
+    let cells = || {
+        policy_grid()
+            .into_iter()
+            .map(|(label, factory)| SweepCell::new(label, SimConfig::default(), factory))
+            .collect::<Vec<_>>()
+    };
+    let a = runner.run(cells());
+    let b = runner.run(cells());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.result.metrics.cold_starts, y.result.metrics.cold_starts);
+        assert_eq!(
+            x.result.metrics.total_carbon_g().to_bits(),
+            y.result.metrics.total_carbon_g().to_bits()
+        );
+    }
+}

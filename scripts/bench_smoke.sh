@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Perf smoke: lint gates + a shrunken sim_throughput run that writes
+# BENCH_sim.json (median ns + invocations/s per label). Run from anywhere;
+# compares nothing itself — commit BENCH_sim.json deltas alongside perf PRs
+# and eyeball the trajectory (EXPERIMENTS.md §Perf).
+#
+#   SKIP_LINT=1 scripts/bench_smoke.sh   # benches only, no fmt/clippy
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${SKIP_LINT:-0}" != "1" ]]; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+    echo "== cargo clippy (deny warnings) =="
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "== bench: sim_throughput --smoke =="
+cargo bench --bench sim_throughput -- --smoke
+
+if [[ -f BENCH_sim.json ]]; then
+    echo "== BENCH_sim.json =="
+    cat BENCH_sim.json
+else
+    echo "error: bench did not write BENCH_sim.json" >&2
+    exit 1
+fi
