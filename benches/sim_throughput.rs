@@ -25,6 +25,7 @@ use lace_rl::policy::{CarbonMin, FixedTimeout, KeepAlivePolicy, LatencyMin};
 use lace_rl::simulator::engine::{SimConfig, Simulator};
 use lace_rl::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
 use lace_rl::simulator::reuse::ReuseWindow;
+use lace_rl::simulator::sharded::ShardedSimulator;
 use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
 use lace_rl::util::bench::{bench, bench_once, black_box, Report};
 
@@ -106,6 +107,30 @@ fn main() -> anyhow::Result<()> {
         par_runner.threads(),
         seq_s / par_s.max(1e-12),
     );
+
+    // Function-sharded single run: the *same* one-trace replay split across
+    // cores (simulator::sharded). k=1 runs the identical sequential path,
+    // so the ratio isolates the sharding win; output is bit-identical at
+    // every k (tests/property_sharded.rs), making this a pure speedup.
+    println!("== sharded single run (fixed-60s) ==\n");
+    let mut base_ns = 0.0f64;
+    for k in [1usize, 2, 4, 8] {
+        let sim = ShardedSimulator::new(&trace, &ci, energy.clone(), SimConfig::default())
+            .with_shards(k);
+        let s = bench_once(&format!("sharded/fixed-60s-{k}shards"), samples, || {
+            let mut policy = FixedTimeout::huawei();
+            black_box(sim.run(&mut policy).metrics.cold_starts);
+        });
+        if k == 1 {
+            base_ns = s.median_ns;
+        }
+        println!(
+            "  -> {:.2}M invocations/s, {:.2}x vs 1 shard\n",
+            n / (s.median_ns / 1e9) / 1e6,
+            base_ns / s.median_ns.max(1e-9),
+        );
+        report.add(s);
+    }
 
     println!("== per-invocation pieces ==\n");
     // State encoding.

@@ -64,8 +64,8 @@ mod tests {
     use std::sync::mpsc::sync_channel;
 
     fn trace(n: usize) -> Trace {
-        Trace {
-            functions: vec![FunctionProfile {
+        Trace::new(
+            vec![FunctionProfile {
                 id: 0,
                 runtime: Runtime::Python,
                 trigger: TriggerType::Http,
@@ -74,10 +74,10 @@ mod tests {
                 cold_start_s: 0.1,
                 mean_exec_s: 0.1,
             }],
-            invocations: (0..n)
+            (0..n)
                 .map(|i| Invocation { t: i as f64 * 0.1, func: 0, exec_s: 0.01 })
                 .collect(),
-        }
+        )
     }
 
     #[test]

@@ -5,7 +5,8 @@
 use crate::carbon::intensity::CarbonTrace;
 use crate::experiments::{results_dir, workload};
 use crate::policy::fixed::FixedTimeout;
-use crate::simulator::engine::{SimConfig, Simulator};
+use crate::simulator::engine::SimConfig;
+use crate::simulator::sharded::ShardedSimulator;
 use crate::trace::model::Trace;
 use crate::trace::stats;
 use crate::trace::synth::TraceGenerator;
@@ -47,7 +48,7 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
         let mut prev_cold = u64::MAX;
         let mut prev_idle = -1.0;
         for &timeout in TIMEOUTS.iter() {
-            let sim = Simulator::new(&sub, &ci, workload_energy(), SimConfig::default());
+            let sim = ShardedSimulator::new(&sub, &ci, workload_energy(), SimConfig::default());
             // FixedTimeout snaps to the action grid; for 120s reuse 60s twice
             // is not expressible, so extend the grid by running 60s twice —
             // instead just snap (documented: action set caps at 60s; the
@@ -115,13 +116,13 @@ fn pick(
 }
 
 fn single_function(trace: &Trace, func: u32) -> Trace {
-    Trace {
-        functions: trace.functions.clone(),
-        invocations: trace
+    Trace::new(
+        trace.functions.clone(),
+        trace
             .invocations
             .iter()
             .filter(|i| i.func == func)
             .copied()
             .collect(),
-    }
+    )
 }

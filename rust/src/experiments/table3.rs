@@ -93,13 +93,13 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
 /// First `span_s` seconds of a trace.
 fn time_slice(trace: &Trace, span_s: f64) -> Trace {
     let t0 = trace.invocations.first().map(|i| i.t).unwrap_or(0.0);
-    Trace {
-        functions: trace.functions.clone(),
-        invocations: trace
+    Trace::new(
+        trace.functions.clone(),
+        trace
             .invocations
             .iter()
             .take_while(|i| i.t - t0 <= span_s)
             .copied()
             .collect(),
-    }
+    )
 }

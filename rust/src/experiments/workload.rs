@@ -9,8 +9,9 @@ use crate::carbon::intensity::CarbonTrace;
 use crate::carbon::synth::{synth_region, Region};
 use crate::energy::model::EnergyModel;
 use crate::policy::KeepAlivePolicy;
-use crate::simulator::engine::{SimConfig, SimResult, Simulator};
+use crate::simulator::engine::{SimConfig, SimResult};
 use crate::simulator::metrics::SimMetrics;
+use crate::simulator::sharded::ShardedSimulator;
 use crate::trace::model::Trace;
 use crate::trace::synth::{SynthConfig, TraceGenerator};
 
@@ -63,6 +64,8 @@ pub fn build(seed: u64, quick: bool) -> Workload {
 }
 
 /// Run one policy over a trace with the standard evaluation config.
+/// Single runs are function-sharded across the machine's cores
+/// (bit-identical to sequential; `LACE_SIM_SHARDS=1` forces sequential).
 pub fn evaluate(
     trace: &Trace,
     ci: &CarbonTrace,
@@ -76,7 +79,7 @@ pub fn evaluate(
         provide_oracle_gap: oracle_gap,
         ..SimConfig::default()
     };
-    let sim = Simulator::new(trace, ci, energy.clone(), cfg);
+    let sim = ShardedSimulator::new(trace, ci, energy.clone(), cfg);
     let SimResult { metrics, .. } = sim.run(policy);
     metrics
 }

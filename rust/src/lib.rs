@@ -26,6 +26,7 @@
 //! | [`energy`] | the paper's energy/carbon accounting model (Eq. 1–4) + FunctionBench Table II calibration |
 //! | [`simulator`] | event-driven cluster: pods, warm pool, keep-alive expiry, metrics |
 //! | [`simulator::parallel`] | sweep harness: policy×config cells across scoped threads, deterministic order, bit-identical to sequential |
+//! | [`simulator::sharded`] | function-sharded single-run parallelism: one trace split across cores via `KeepAlivePolicy::fork`, bit-identical to sequential |
 //! | [`policy`] | the six keep-alive policies behind one trait |
 //! | [`rl`] | state encoder, replay buffer, ε-greedy agent, Rust-side DQN trainer, weight I/O |
 //! | [`runtime`] | PJRT client wrapper: load HLO text artifacts, compile, execute |

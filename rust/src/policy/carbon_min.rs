@@ -2,7 +2,7 @@
 //! always choosing the shortest keep-alive, accepting the resulting cold
 //! starts (the paper's high-latency extreme in Figs. 5b/8b).
 
-use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::policy::{BoxedPolicy, DecisionContext, KeepAlivePolicy};
 
 #[derive(Debug, Clone, Default)]
 pub struct CarbonMin;
@@ -14,6 +14,10 @@ impl KeepAlivePolicy for CarbonMin {
 
     fn decide(&mut self, _ctx: &DecisionContext) -> usize {
         0 // shortest keep-alive in the action set
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        Some(Box::new(self.clone()))
     }
 }
 

@@ -16,9 +16,10 @@
 //! (4,600× in the paper). `benches/decision_latency.rs` measures ours.
 
 use crate::energy::JOULES_PER_KWH;
-use crate::policy::{blended_cost, DecisionContext, KeepAlivePolicy};
+use crate::policy::{blended_cost, BoxedPolicy, DecisionContext, KeepAlivePolicy};
 use crate::util::rng::Rng;
 use crate::KEEP_ALIVE_ACTIONS;
+use std::collections::HashMap;
 
 /// PSO hyper-parameters (standard constriction-style settings).
 #[derive(Debug, Clone)]
@@ -46,7 +47,11 @@ impl Default for DpsoConfig {
 
 pub struct Dpso {
     cfg: DpsoConfig,
-    rng: Rng,
+    /// One RNG stream per function id, derived statelessly from the seed
+    /// (`Rng::stream`): each function's swarm randomness depends only on
+    /// its own decision history, so decisions are invariant under sharding
+    /// the trace across threads (`simulator::sharded`).
+    streams: HashMap<u32, Rng>,
     // Reused particle buffers (avoid per-decision allocation).
     pos: Vec<f64>,
     vel: Vec<f64>,
@@ -57,10 +62,9 @@ pub struct Dpso {
 impl Dpso {
     pub fn new(cfg: DpsoConfig) -> Self {
         let n = cfg.particles;
-        let rng = Rng::new(cfg.seed);
         Dpso {
             cfg,
-            rng,
+            streams: HashMap::new(),
             pos: vec![0.0; n],
             vel: vec![0.0; n],
             pbest: vec![0.0; n],
@@ -105,14 +109,19 @@ impl KeepAlivePolicy for Dpso {
         let lo = KEEP_ALIVE_ACTIONS[0];
         let hi = KEEP_ALIVE_ACTIONS[KEEP_ALIVE_ACTIONS.len() - 1];
         let n = self.cfg.particles;
+        let seed = self.cfg.seed;
+        let rng = self
+            .streams
+            .entry(ctx.func.id)
+            .or_insert_with(|| Rng::stream(seed, ctx.func.id as u64));
 
         let mut gbest = lo;
         let mut gbest_cost = f64::INFINITY;
 
         // Init swarm.
         for i in 0..n {
-            self.pos[i] = self.rng.range(lo, hi);
-            self.vel[i] = self.rng.range(-(hi - lo) * 0.1, (hi - lo) * 0.1);
+            self.pos[i] = rng.range(lo, hi);
+            self.vel[i] = rng.range(-(hi - lo) * 0.1, (hi - lo) * 0.1);
             let c = Self::fitness(ctx, self.pos[i]);
             self.pbest[i] = self.pos[i];
             self.pbest_cost[i] = c;
@@ -125,8 +134,8 @@ impl KeepAlivePolicy for Dpso {
         // Iterate.
         for _ in 0..self.cfg.iterations {
             for i in 0..n {
-                let r1 = self.rng.f64();
-                let r2 = self.rng.f64();
+                let r1 = rng.f64();
+                let r2 = rng.f64();
                 self.vel[i] = self.cfg.inertia * self.vel[i]
                     + self.cfg.c_personal * r1 * (self.pbest[i] - self.pos[i])
                     + self.cfg.c_global * r2 * (gbest - self.pos[i]);
@@ -154,6 +163,13 @@ impl KeepAlivePolicy for Dpso {
             }
         }
         best_a
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        // A fresh instance behaves identically: streams are derived
+        // statelessly per function id, and the swarm buffers are fully
+        // re-initialized at every decision.
+        Some(Box::new(Dpso::new(self.cfg.clone())))
     }
 }
 
@@ -199,6 +215,39 @@ mod tests {
         let a1 = Dpso::new(DpsoConfig::default()).decide(&c);
         let a2 = Dpso::new(DpsoConfig::default()).decide(&c);
         assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn decisions_invariant_under_function_interleaving() {
+        // Per-function streams: function 1's decisions are the same whether
+        // function 0's decisions happen in between or not (the sharding
+        // invariance the fork contract requires).
+        let f0 = profile(2.0);
+        let mut f1 = profile(2.0);
+        f1.id = 1;
+        let c0 = ctx(&f0, 300.0, [0.1, 0.4, 0.6, 0.8, 0.9], 0.5);
+        let c1 = ctx(&f1, 500.0, [0.2, 0.3, 0.5, 0.7, 0.95], 0.5);
+
+        let mut interleaved = Dpso::new(DpsoConfig::default());
+        let mut alone = Dpso::new(DpsoConfig::default());
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            interleaved.decide(&c0);
+            got.push(interleaved.decide(&c1));
+        }
+        let want: Vec<usize> = (0..3).map(|_| alone.decide(&c1)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fork_matches_original() {
+        let f = profile(2.0);
+        let c = ctx(&f, 300.0, [0.1, 0.4, 0.6, 0.8, 0.9], 0.5);
+        let mut orig = Dpso::new(DpsoConfig::default());
+        let mut forked = orig.fork().unwrap();
+        for _ in 0..3 {
+            assert_eq!(orig.decide(&c), forked.decide(&c));
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Fixed-timeout policy — Huawei's production configuration (§IV-A5).
 
-use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::policy::{BoxedPolicy, DecisionContext, KeepAlivePolicy};
 use crate::KEEP_ALIVE_ACTIONS;
 
 /// Always keeps pods alive for the same duration. `FixedTimeout::huawei()`
@@ -63,6 +63,10 @@ impl KeepAlivePolicy for FixedTimeout {
 
     fn refreshes_timer(&self) -> bool {
         self.refresh
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        Some(Box::new(self.clone()))
     }
 }
 

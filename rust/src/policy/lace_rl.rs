@@ -9,12 +9,20 @@
 //!
 //! Both paths are asserted to agree in the integration tests.
 
-use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::policy::{BoxedPolicy, DecisionContext, KeepAlivePolicy};
 use crate::rl::encoder::{encode, STATE_DIM};
 
 /// Minimal Q-function interface: state in, per-action Q-values out.
 pub trait QFunction {
     fn q_values(&mut self, state: &[f32; STATE_DIM]) -> [f32; 5];
+
+    /// Build a shard-local `LaceRlPolicy` over this Q-function for the
+    /// sharded simulator (`KeepAlivePolicy::fork`). Default `None`:
+    /// backends that can't cross threads cheaply (PJRT executables hold
+    /// client handles) keep the sequential path.
+    fn fork_policy(&self) -> Option<BoxedPolicy> {
+        None
+    }
 }
 
 impl QFunction for crate::policy::native_mlp::NativeMlp {
@@ -23,6 +31,12 @@ impl QFunction for crate::policy::native_mlp::NativeMlp {
         let mut out = [0.0f32; 5];
         out.copy_from_slice(&q[..5]);
         out
+    }
+
+    fn fork_policy(&self) -> Option<BoxedPolicy> {
+        // Frozen weights shared behind the Arc; per-fork scratch only.
+        use crate::policy::native_mlp::NativeMlp;
+        Some(Box::new(LaceRlPolicy::new(NativeMlp::from_arc(self.params_arc()))))
     }
 }
 
@@ -108,6 +122,14 @@ impl<Q: QFunction> KeepAlivePolicy for LaceRlPolicy<Q> {
             self.decisions.push(DecisionRecord { t: ctx.t, action: best, ci: ctx.ci });
         }
         best
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        if self.record {
+            // Recording runs keep all decisions on one instance.
+            return None;
+        }
+        self.q.fork_policy()
     }
 }
 

@@ -4,7 +4,7 @@
 //! minimized by the longest timeout — the greedy over-provisioner the
 //! paper shows exploding keep-alive carbon (Fig. 5c).
 
-use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::policy::{BoxedPolicy, DecisionContext, KeepAlivePolicy};
 use crate::KEEP_ALIVE_ACTIONS;
 
 /// Pre-warm horizon (s): Latency-Min retains pods an order of magnitude
@@ -38,6 +38,10 @@ impl KeepAlivePolicy for LatencyMin {
 
     fn decide_seconds(&mut self, ctx: &DecisionContext) -> (usize, f64) {
         (self.decide(ctx), PREWARM_HORIZON_S)
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        Some(Box::new(self.clone()))
     }
 }
 

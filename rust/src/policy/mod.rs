@@ -85,8 +85,36 @@ pub struct Outcome {
     pub done: bool,
 }
 
+/// A heap-allocated policy that may cross thread boundaries (sweep cells,
+/// simulation shards).
+pub type BoxedPolicy = Box<dyn KeepAlivePolicy + Send>;
+
 /// A keep-alive policy. `decide` returns an index into
 /// [`KEEP_ALIVE_ACTIONS`].
+///
+/// ## The `fork()` contract (sharded simulation)
+///
+/// The per-function MDP (§III) makes every function's decisions independent
+/// of every other function's, so `simulator::sharded::ShardedSimulator` can
+/// replay disjoint function subsets on separate threads — *if* the policy
+/// can hand each shard an instance whose per-function behaviour is
+/// identical to its own. [`fork`](Self::fork) produces such an instance:
+///
+/// * **Stateless / config-only** policies (fixed timeouts, greedy
+///   baselines, Oracle) fork by `Clone`.
+/// * **Frozen-weight** policies (LACE-RL over [`native_mlp::NativeMlp`])
+///   fork by sharing the weights behind an `Arc` — no deep copy.
+/// * **Stochastic** policies (DPSO, the ε-greedy trainer agent) must derive
+///   their randomness from per-function-id streams
+///   ([`crate::util::rng::Rng::stream`]), so the sequence each function
+///   sees is invariant under any shard count.
+/// * Policies whose behaviour or collected state cannot be partitioned by
+///   function (recording runs, PJRT-backed inference) return `None`, and
+///   the sharded simulator falls back to a sequential run.
+///
+/// After the shards finish, [`absorb`](Self::absorb) is called on the
+/// original once per fork, in shard (= ascending function-id) order, so
+/// stateful policies can merge harvested state back deterministically.
 pub trait KeepAlivePolicy {
     fn name(&self) -> &str;
 
@@ -115,6 +143,24 @@ pub trait KeepAlivePolicy {
 
     /// Feedback when a past decision resolves. Default: ignore.
     fn observe(&mut self, _outcome: &Outcome) {}
+
+    /// Produce a shard-local instance for parallel replay (see the trait
+    /// docs for the contract). Default: `None` — the sharded simulator
+    /// falls back to a sequential run.
+    fn fork(&self) -> Option<BoxedPolicy> {
+        None
+    }
+
+    /// Merge state harvested by a fork back into the original. Called once
+    /// per fork, in shard order, after all shards finish. Default: no-op
+    /// (stateless forks have nothing to return).
+    fn absorb(&mut self, _fork: &mut (dyn KeepAlivePolicy + Send)) {}
+
+    /// Downcast hook for [`absorb`](Self::absorb) implementations that need
+    /// the fork's concrete type. Default: `None`.
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
 }
 
 /// Convert an action index to seconds.

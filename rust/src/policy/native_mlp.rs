@@ -7,11 +7,17 @@
 //! integration tests.
 
 use crate::rl::qnet::QNetParams;
+use std::sync::Arc;
 
 /// f32 MLP: input `d_in` → relu(h1) → relu(h2) → `d_out`.
+///
+/// Weights live behind an `Arc` so forks (shard-local policies, the
+/// trainer's per-episode agent refresh) share one frozen copy instead of
+/// deep-cloning O(10k) floats; only the small scratch buffers are per
+/// instance.
 #[derive(Debug, Clone)]
 pub struct NativeMlp {
-    params: QNetParams,
+    params: Arc<QNetParams>,
     // Scratch buffers: no allocation on the per-decision hot path.
     h1: Vec<f32>,
     h2: Vec<f32>,
@@ -20,6 +26,11 @@ pub struct NativeMlp {
 
 impl NativeMlp {
     pub fn new(params: QNetParams) -> Self {
+        Self::from_arc(Arc::new(params))
+    }
+
+    /// Build on already-shared weights (no copy).
+    pub fn from_arc(params: Arc<QNetParams>) -> Self {
         let h1 = vec![0.0; params.hidden1()];
         let h2 = vec![0.0; params.hidden2()];
         let out = vec![0.0; params.n_actions()];
@@ -28,6 +39,22 @@ impl NativeMlp {
 
     pub fn params(&self) -> &QNetParams {
         &self.params
+    }
+
+    /// Shared handle to the weights (for forking without a deep copy).
+    pub fn params_arc(&self) -> Arc<QNetParams> {
+        Arc::clone(&self.params)
+    }
+
+    /// Swap in new weights, reusing the scratch buffers when the
+    /// architecture is unchanged (the per-episode trainer path).
+    pub fn set_params(&mut self, params: Arc<QNetParams>) {
+        if params.dims != self.params.dims {
+            self.h1.resize(params.hidden1(), 0.0);
+            self.h2.resize(params.hidden2(), 0.0);
+            self.out.resize(params.n_actions(), 0.0);
+        }
+        self.params = params;
     }
 
     /// Forward pass; returns the Q-value slice (valid until next call).

@@ -12,7 +12,7 @@
 //! limit LACE-RL is measured against (Table III).
 
 use crate::energy::JOULES_PER_KWH;
-use crate::policy::{blended_cost, DecisionContext, KeepAlivePolicy};
+use crate::policy::{blended_cost, BoxedPolicy, DecisionContext, KeepAlivePolicy};
 use crate::KEEP_ALIVE_ACTIONS;
 
 #[derive(Debug, Clone, Default)]
@@ -56,6 +56,10 @@ impl KeepAlivePolicy for Oracle {
             }
         }
         best
+    }
+
+    fn fork(&self) -> Option<BoxedPolicy> {
+        Some(Box::new(self.clone()))
     }
 }
 

@@ -12,6 +12,8 @@
 //! decays ×0.95 per episode to 0.05. λ_carbon is sampled per episode so the
 //! network learns the preference-conditioned policy (§III-C).
 
+use std::sync::Arc;
+
 use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
 use crate::policy::native_mlp::NativeMlp;
@@ -20,7 +22,8 @@ use crate::rl::encoder::STATE_DIM;
 use crate::rl::qnet::QNetParams;
 use crate::rl::replay::ReplayBuffer;
 use crate::runtime::{ArtifactSet, PjrtRuntime, TrainStep};
-use crate::simulator::engine::{SimConfig, Simulator};
+use crate::simulator::engine::SimConfig;
+use crate::simulator::sharded::ShardedSimulator;
 use crate::trace::model::Trace;
 use crate::util::rng::Rng;
 
@@ -105,8 +108,12 @@ pub fn train(
     let exe = runtime.load_hlo_text(artifacts.train_step_path().to_str().unwrap())?;
     let step_exe = TrainStep::new(exe, cfg.batch, dims);
 
-    let mut params = artifacts.init_params()?;
-    let mut target = params.clone();
+    // Online/target weights live behind `Arc`: a target sync is a pointer
+    // copy (snapshots are immutable — gradient steps *replace* the online
+    // Arc), and episode rollouts fork the same Arc into shard agents
+    // without deep-copying the network.
+    let mut params = Arc::new(artifacts.init_params()?);
+    let mut target = Arc::clone(&params);
     let mut m = QNetParams::zeros(dims);
     let mut v = QNetParams::zeros(dims);
 
@@ -126,16 +133,25 @@ pub fn train(
 
     let lambda_grid = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
 
+    // One agent reused across episodes (keeps its pending-map capacity);
+    // weights are swapped in per episode via the shared Arc.
+    let mut agent =
+        EpsilonGreedyAgent::new(NativeMlp::from_arc(Arc::clone(&params)), epsilon, cfg.seed);
+
     for ep in 0..cfg.episodes {
         let lambda = cfg
             .lambda_carbon
             .unwrap_or_else(|| *rng.choice(&lambda_grid));
 
-        // --- Rollout: ε-greedy over the training trace.
-        let mut agent =
-            EpsilonGreedyAgent::new(NativeMlp::new(params.clone()), epsilon, cfg.seed ^ ep as u64);
+        // --- Rollout: ε-greedy over the training trace, function-sharded
+        // across cores. The agent's per-function RNG streams and canonical
+        // transition drain order make the rollout shard-count-invariant.
+        agent.reset_episode();
+        agent.reseed(cfg.seed ^ ep as u64);
+        agent.epsilon = epsilon;
+        agent.set_mlp(NativeMlp::from_arc(Arc::clone(&params)));
         let sim_cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
-        let sim = Simulator::new(trace, ci, energy.clone(), sim_cfg);
+        let sim = ShardedSimulator::new(trace, ci, energy.clone(), sim_cfg);
         sim.run(&mut agent);
         let episode_reward = agent.episode_reward;
         let transitions = agent.take_transitions();
@@ -166,13 +182,15 @@ pub fn train(
                     &ns_buf,
                     &d_buf,
                 )?;
-                params = out.params;
+                params = Arc::new(out.params);
                 m = out.m;
                 v = out.v;
                 loss_sum += out.loss;
                 loss_n += 1;
                 if t_step % cfg.target_sync_steps as u64 == 0 {
-                    target = params.clone();
+                    // Pointer copy: the old online snapshot becomes the
+                    // target; no parameter deep-clone on the sync path.
+                    target = Arc::clone(&params);
                 }
             }
         }
@@ -200,6 +218,11 @@ pub fn train(
         epsilon = (epsilon * cfg.epsilon_decay).max(cfg.epsilon_min);
     }
 
+    // Release the other Arc holders (agent's MLP, target snapshot) so the
+    // final weights unwrap without a deep clone.
+    drop(agent);
+    drop(target);
+    let params = Arc::try_unwrap(params).unwrap_or_else(|a| (*a).clone());
     Ok(TrainReport { params, episodes, total_steps: t_step })
 }
 

@@ -10,12 +10,29 @@
 //!
 //! Semantics notes (see DESIGN.md §7):
 //! * Warm-pool selection is most-recently-used.
-//! * A cold start's latency penalty is attributed to the pod of the same
-//!   function that expired most recently at/before this arrival and was
-//!   resolved at this arrival; earlier-resolved expiries are not
+//! * A cold start's latency penalty is attributed to exactly one pod: the
+//!   one of the same function that expired most recently at/before this
+//!   arrival and was resolved at this arrival (ties on `warm_until` charge
+//!   the last-drained pod only); earlier-resolved expiries are not
 //!   retro-charged (documented approximation).
 //! * End-of-trace flush charges idle carbon up to min(warm_until, t_end)
 //!   and resolves remaining decisions with `done = true`.
+//!
+//! ## Shard semantics
+//!
+//! All per-invocation state — warm pods, reuse windows, last-completion
+//! times, and the metric sums they feed — is keyed by function id; the
+//! per-function MDP (§III) has no cross-function coupling except (a) the
+//! order in which f64 metrics are accumulated and (b) the global end time
+//! `t_end` that bounds the end-of-trace flush. The engine therefore runs as
+//! a [`ShardPass`] over a contiguous function-id range: the sequential
+//! [`Simulator::run`] uses one pass over `0..nf`, and
+//! `simulator::sharded::ShardedSimulator` runs one pass per shard on its
+//! own thread against a policy obtained from `KeepAlivePolicy::fork` (see
+//! the fork contract on that trait). Both paths accumulate per-function
+//! partial [`SimMetrics`] and fold them in ascending function-id order, and
+//! both flush against the global `t_end` — which is why sharded results are
+//! bit-identical to sequential ones.
 
 use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
@@ -69,233 +86,262 @@ pub struct Simulator<'a> {
     pub cfg: SimConfig,
 }
 
-impl<'a> Simulator<'a> {
-    pub fn new(trace: &'a Trace, ci: &'a CarbonTrace, energy: EnergyModel, cfg: SimConfig) -> Self {
-        Simulator { trace, ci, energy, cfg }
-    }
-
-    /// Precompute, for each invocation index, the arrival time of the same
-    /// function's next invocation (INFINITY if none).
-    fn next_arrival_times(&self) -> Vec<f64> {
-        let n = self.trace.invocations.len();
-        let mut next = vec![f64::INFINITY; n];
-        let mut last_idx: Vec<Option<usize>> = vec![None; self.trace.functions.len()];
-        for (i, inv) in self.trace.invocations.iter().enumerate() {
-            let f = inv.func as usize;
-            if let Some(prev) = last_idx[f] {
-                next[prev] = inv.t;
-            }
-            last_idx[f] = Some(i);
+/// Precompute, for each invocation index, the arrival time of the same
+/// function's next invocation (INFINITY if none). The value at index `i`
+/// depends only on invocations of the same function, so a pass over a
+/// shard's sub-stream reads the same numbers the sequential run does.
+pub(crate) fn next_arrival_times(trace: &Trace) -> Vec<f64> {
+    let n = trace.invocations.len();
+    let mut next = vec![f64::INFINITY; n];
+    let mut last_idx: Vec<Option<usize>> = vec![None; trace.functions.len()];
+    for (i, inv) in trace.invocations.iter().enumerate() {
+        let f = inv.func as usize;
+        if let Some(prev) = last_idx[f] {
+            next[prev] = inv.t;
         }
-        next
+        last_idx[f] = Some(i);
     }
+    next
+}
 
-    /// Run the policy over the whole trace.
-    pub fn run(&self, policy: &mut dyn KeepAlivePolicy) -> SimResult {
-        let trace = self.trace;
-        let nf = trace.functions.len();
-        let mut metrics = SimMetrics::new();
-        let mut latencies = Vec::new();
-        if self.cfg.track_latencies {
-            latencies.reserve(trace.invocations.len());
-        }
+/// All simulation state of one function: warm pods, the sliding reuse
+/// window, the last completion time, and this function's partial metrics.
+struct FuncState {
+    pods: Vec<Pod>,
+    window: ReuseWindow,
+    last_completion: f64,
+    metrics: SimMetrics,
+}
 
-        let mut pods: Vec<Vec<Pod>> = vec![Vec::new(); nf];
-        let mut windows: Vec<ReuseWindow> = (0..nf)
-            .map(|_| ReuseWindow::new(self.cfg.reuse_window))
+/// One replay pass over a contiguous function-id range (see the module
+/// docs). `step` consumes invocations of functions in `f_lo..f_lo+len` in
+/// arrival order; `flush` resolves leftover pods against the *global*
+/// `t_end`; `collect` folds the per-function partials in function-id order.
+pub(crate) struct ShardPass<'a> {
+    trace: &'a Trace,
+    ci: &'a CarbonTrace,
+    energy: &'a EnergyModel,
+    cfg: &'a SimConfig,
+    f_lo: usize,
+    funcs: Vec<FuncState>,
+    // Scratch buffer for just-expired decisions, reused across
+    // invocations — the hot loop allocates nothing per arrival.
+    expired: Vec<(Pending, f64, f64, f64)>, // (pending, warm_until, idle_carbon, span)
+    /// Latest completion time seen by this pass.
+    pub(crate) t_end: f64,
+}
+
+impl<'a> ShardPass<'a> {
+    pub(crate) fn new(
+        trace: &'a Trace,
+        ci: &'a CarbonTrace,
+        energy: &'a EnergyModel,
+        cfg: &'a SimConfig,
+        funcs: std::ops::Range<usize>,
+    ) -> ShardPass<'a> {
+        let f_lo = funcs.start;
+        let states = funcs
+            .map(|_| FuncState {
+                pods: Vec::new(),
+                window: ReuseWindow::new(cfg.reuse_window),
+                last_completion: f64::NEG_INFINITY,
+                metrics: SimMetrics::new(),
+            })
             .collect();
-        let mut last_completion: Vec<f64> = vec![f64::NEG_INFINITY; nf];
-        let next_arrival = if self.cfg.provide_oracle_gap {
-            self.next_arrival_times()
-        } else {
-            Vec::new()
-        };
+        ShardPass { trace, ci, energy, cfg, f_lo, funcs: states, expired: Vec::new(), t_end: 0.0 }
+    }
 
-        let mut t_end: f64 = 0.0;
+    /// Replay one invocation; returns its end-to-end latency.
+    /// `next_arrival_t` is the same function's next arrival time (INFINITY
+    /// if none); only read when `provide_oracle_gap` is set.
+    pub(crate) fn step(
+        &mut self,
+        policy: &mut dyn KeepAlivePolicy,
+        inv: &crate::trace::model::Invocation,
+        next_arrival_t: f64,
+    ) -> f64 {
+        let f = inv.func as usize;
+        let prof = &self.trace.functions[f];
+        let t = inv.t;
+        let active_w = self.energy.active_power_w(prof.mem_mb, prof.cpu_cores);
+        let idle_w = self.energy.lambda_idle * active_w;
+        let st = &mut self.funcs[f - self.f_lo];
 
-        // Scratch buffer for just-expired decisions, reused across
-        // invocations — the hot loop allocates nothing per arrival.
-        let mut expired: Vec<(Pending, f64, f64, f64)> = Vec::new(); // (pending, warm_until, idle_carbon, span)
+        // (1) Observe the reuse gap from the previous completion.
+        if st.last_completion > f64::NEG_INFINITY {
+            st.window.push((t - st.last_completion).max(0.0));
+        }
 
-        for (idx, inv) in trace.invocations.iter().enumerate() {
-            let f = inv.func as usize;
-            let prof = &trace.functions[f];
-            let t = inv.t;
-            let active_w = self.energy.active_power_w(prof.mem_mb, prof.cpu_cores);
-            let idle_w = self.energy.lambda_idle * active_w;
-
-            // (1) Observe the reuse gap from the previous completion.
-            if last_completion[f] > f64::NEG_INFINITY {
-                windows[f].push((t - last_completion[f]).max(0.0));
+        // (2) Lazily expire pods; remember this arrival's expiries for
+        //     cold-penalty attribution. (`expired` is drained below, so
+        //     it is always empty here.)
+        let mut i = 0;
+        while i < st.pods.len() {
+            if st.pods[i].expired(t) {
+                let pod = st.pods.swap_remove(i);
+                let span = (pod.warm_until - pod.idle_start).max(0.0);
+                let span_carbon = idle_w
+                    * self.ci.integrate(pod.idle_start, pod.warm_until)
+                    / crate::energy::JOULES_PER_KWH;
+                st.metrics.keepalive_carbon_g += span_carbon;
+                st.metrics.idle_pod_seconds += span;
+                st.metrics.wasted_idle_seconds += span;
+                if let Some(p) = pod.pending {
+                    self.expired.push((p, pod.warm_until, span_carbon, span));
+                }
+            } else {
+                i += 1;
             }
+        }
 
-            // (2) Lazily expire pods; remember the latest expiry for
-            //     cold-penalty attribution. (`expired` is drained below, so
-            //     it is always empty here.)
-            let fpods = &mut pods[f];
-            let mut i = 0;
-            while i < fpods.len() {
-                if fpods[i].expired(t) {
-                    let pod = fpods.swap_remove(i);
-                    let span = (pod.warm_until - pod.idle_start).max(0.0);
-                    let span_carbon = idle_w
-                        * self.ci.integrate(pod.idle_start, pod.warm_until)
-                        / crate::energy::JOULES_PER_KWH;
-                    metrics.keepalive_carbon_g += span_carbon;
-                    metrics.idle_pod_seconds += span;
-                    metrics.wasted_idle_seconds += span;
-                    if let Some(p) = pod.pending {
-                        expired.push((p, pod.warm_until, span_carbon, span));
-                    }
-                } else {
-                    i += 1;
-                }
+        // (3) Serve: MRU warm pod or cold start.
+        let mut chosen: Option<usize> = None;
+        let mut best_idle_start = f64::NEG_INFINITY;
+        for (pi, pod) in st.pods.iter().enumerate() {
+            if pod.available(t) && pod.idle_start > best_idle_start {
+                best_idle_start = pod.idle_start;
+                chosen = Some(pi);
             }
+        }
 
-            // (3) Serve: MRU warm pod or cold start.
-            let mut chosen: Option<usize> = None;
-            let mut best_idle_start = f64::NEG_INFINITY;
-            for (pi, pod) in fpods.iter().enumerate() {
-                if pod.available(t) && pod.idle_start > best_idle_start {
-                    best_idle_start = pod.idle_start;
-                    chosen = Some(pi);
-                }
-            }
-
-            let (is_cold, cold_lat, pod_idx) = match chosen {
-                Some(pi) => {
-                    // Warm start: close the idle period [idle_start, t].
-                    let pod = &mut fpods[pi];
-                    let idle_carbon = idle_w
-                        * self.ci.integrate(pod.idle_start, t)
-                        / crate::energy::JOULES_PER_KWH;
-                    metrics.keepalive_carbon_g += idle_carbon;
-                    metrics.idle_pod_seconds += t - pod.idle_start;
-                    if let Some(p) = pod.pending.take() {
-                        policy.observe(&Outcome {
-                            func: inv.func,
-                            action: p.action,
-                            t: p.t,
-                            resolved_t: t,
-                            reused: true,
-                            idle_span_s: t - pod.idle_start,
-                            idle_carbon_g: idle_carbon,
-                            cold_penalty_s: 0.0,
-                            done: false,
-                        });
-                    }
-                    (false, 0.0, pi)
-                }
-                None => {
-                    // Cold start.
-                    let cold_lat = prof.cold_start_s;
-                    metrics.cold_carbon_g += self.energy.cold_carbon_g(
-                        prof.mem_mb,
-                        prof.cpu_cores,
-                        t,
-                        cold_lat,
-                        self.ci,
-                    );
-                    fpods.push(Pod::new_busy(t + cold_lat + inv.exec_s));
-                    (true, cold_lat, fpods.len() - 1)
-                }
-            };
-
-            // Resolve this arrival's just-expired decisions: the most recent
-            // expiry is charged the cold start it failed to prevent (if any).
-            if !expired.is_empty() {
-                let latest = expired
-                    .iter()
-                    .map(|(_, wu, _, _)| *wu)
-                    .fold(f64::NEG_INFINITY, f64::max);
-                for (p, warm_until, idle_carbon, span) in expired.drain(..) {
-                    let penalty = if is_cold && warm_until == latest {
-                        cold_lat
-                    } else {
-                        0.0
-                    };
+        let (is_cold, cold_lat, pod_idx) = match chosen {
+            Some(pi) => {
+                // Warm start: close the idle period [idle_start, t].
+                let pod = &mut st.pods[pi];
+                let idle_carbon = idle_w
+                    * self.ci.integrate(pod.idle_start, t)
+                    / crate::energy::JOULES_PER_KWH;
+                st.metrics.keepalive_carbon_g += idle_carbon;
+                st.metrics.idle_pod_seconds += t - pod.idle_start;
+                if let Some(p) = pod.pending.take() {
                     policy.observe(&Outcome {
                         func: inv.func,
                         action: p.action,
                         t: p.t,
                         resolved_t: t,
-                        reused: false,
-                        idle_span_s: span,
+                        reused: true,
+                        idle_span_s: t - pod.idle_start,
                         idle_carbon_g: idle_carbon,
-                        cold_penalty_s: penalty,
+                        cold_penalty_s: 0.0,
                         done: false,
                     });
                 }
+                (false, 0.0, pi)
             }
+            None => {
+                // Cold start.
+                let cold_lat = prof.cold_start_s;
+                st.metrics.cold_carbon_g += self.energy.cold_carbon_g(
+                    prof.mem_mb,
+                    prof.cpu_cores,
+                    t,
+                    cold_lat,
+                    self.ci,
+                );
+                st.pods.push(Pod::new_busy(t + cold_lat + inv.exec_s));
+                (true, cold_lat, st.pods.len() - 1)
+            }
+        };
 
-            // (4) Execution accounting.
-            let completion = t + cold_lat + inv.exec_s;
-            metrics.exec_carbon_g += self.energy.exec_carbon_g(
-                prof.mem_mb,
-                prof.cpu_cores,
-                t + cold_lat,
-                inv.exec_s,
-                self.ci,
-            );
-            metrics.invocations += 1;
+        // Resolve this arrival's just-expired decisions: exactly one — the
+        // most recent expiry (ties on warm_until: the last drained) — is
+        // charged the cold start it failed to prevent (if any).
+        if !self.expired.is_empty() {
+            let mut charged = usize::MAX;
             if is_cold {
-                metrics.cold_starts += 1;
-                metrics.cold_latency_s += cold_lat;
-            } else {
-                metrics.warm_starts += 1;
-            }
-            let e2e = cold_lat + inv.exec_s + self.cfg.network_latency_s;
-            metrics.latency.add(e2e);
-            if self.cfg.track_latencies {
-                latencies.push(e2e);
-            }
-
-            // (5) Keep-alive decision at completion time.
-            let gap = if self.cfg.provide_oracle_gap {
-                let na = next_arrival[idx];
-                if na.is_finite() {
-                    Some((na - completion).max(0.0))
-                } else {
-                    None
+                let mut best = f64::NEG_INFINITY;
+                for (ei, (_, wu, _, _)) in self.expired.iter().enumerate() {
+                    if *wu >= best {
+                        best = *wu;
+                        charged = ei;
+                    }
                 }
-            } else {
-                None
-            };
-            let ctx = DecisionContext {
-                t: completion,
-                func: prof,
-                ci: self.ci.at(completion),
-                reuse_probs: windows[f].probs(),
-                lambda_carbon: self.cfg.lambda_carbon,
-                idle_power_w: idle_w,
-                next_arrival_gap: gap,
-            };
-            let (action, keep_s) = {
-                let (a, k) = policy.decide_seconds(&ctx);
-                (a.min(KEEP_ALIVE_ACTIONS.len() - 1), k)
-            };
-            let pod = &mut pods[f][pod_idx];
-            pod.busy_until = completion;
-            pod.idle_start = completion;
-            // Non-refreshing (static) policies arm the window once, when
-            // the pod first idles; reuses do not extend it.
-            if policy.refreshes_timer() || pod.warm_until == f64::INFINITY {
-                pod.warm_until = completion + keep_s;
             }
-            pod.pending = Some(Pending { action, t: completion });
-
-            last_completion[f] = completion;
-            if completion > t_end {
-                t_end = completion;
+            for (ei, (p, _, idle_carbon, span)) in self.expired.drain(..).enumerate() {
+                let penalty = if ei == charged { cold_lat } else { 0.0 };
+                policy.observe(&Outcome {
+                    func: inv.func,
+                    action: p.action,
+                    t: p.t,
+                    resolved_t: t,
+                    reused: false,
+                    idle_span_s: span,
+                    idle_carbon_g: idle_carbon,
+                    cold_penalty_s: penalty,
+                    done: false,
+                });
             }
         }
 
-        // (6) End-of-trace flush.
-        for (f, fpods) in pods.iter().enumerate() {
-            let prof = &trace.functions[f];
-            let idle_w = self.energy.lambda_idle
-                * self.energy.active_power_w(prof.mem_mb, prof.cpu_cores);
-            for pod in fpods {
+        // (4) Execution accounting.
+        let completion = t + cold_lat + inv.exec_s;
+        st.metrics.exec_carbon_g += self.energy.exec_carbon_g(
+            prof.mem_mb,
+            prof.cpu_cores,
+            t + cold_lat,
+            inv.exec_s,
+            self.ci,
+        );
+        st.metrics.invocations += 1;
+        if is_cold {
+            st.metrics.cold_starts += 1;
+            st.metrics.cold_latency_s += cold_lat;
+        } else {
+            st.metrics.warm_starts += 1;
+        }
+        let e2e = cold_lat + inv.exec_s + self.cfg.network_latency_s;
+        st.metrics.latency.add(e2e);
+
+        // (5) Keep-alive decision at completion time.
+        let gap = if self.cfg.provide_oracle_gap {
+            if next_arrival_t.is_finite() {
+                Some((next_arrival_t - completion).max(0.0))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let ctx = DecisionContext {
+            t: completion,
+            func: prof,
+            ci: self.ci.at(completion),
+            reuse_probs: st.window.probs(),
+            lambda_carbon: self.cfg.lambda_carbon,
+            idle_power_w: idle_w,
+            next_arrival_gap: gap,
+        };
+        let (action, keep_s) = {
+            let (a, k) = policy.decide_seconds(&ctx);
+            (a.min(KEEP_ALIVE_ACTIONS.len() - 1), k)
+        };
+        let pod = &mut st.pods[pod_idx];
+        pod.busy_until = completion;
+        pod.idle_start = completion;
+        // Non-refreshing (static) policies arm the window once, when
+        // the pod first idles; reuses do not extend it.
+        if policy.refreshes_timer() || pod.warm_until == f64::INFINITY {
+            pod.warm_until = completion + keep_s;
+        }
+        pod.pending = Some(Pending { action, t: completion });
+
+        st.last_completion = completion;
+        if completion > self.t_end {
+            self.t_end = completion;
+        }
+        e2e
+    }
+
+    /// End-of-trace flush against the *global* `t_end` (across all shards,
+    /// when sharded — the one cross-function coupling besides fold order).
+    pub(crate) fn flush(&mut self, policy: &mut dyn KeepAlivePolicy, t_end: f64) {
+        for (fi, st) in self.funcs.iter_mut().enumerate() {
+            let f = self.f_lo + fi;
+            let prof = &self.trace.functions[f];
+            let idle_w =
+                self.energy.lambda_idle * self.energy.active_power_w(prof.mem_mb, prof.cpu_cores);
+            let FuncState { pods, metrics, .. } = st;
+            for pod in pods.iter() {
                 let horizon = pod.warm_until.min(t_end).max(pod.idle_start);
                 let idle_carbon = idle_w
                     * self.ci.integrate(pod.idle_start, horizon)
@@ -317,7 +363,53 @@ impl<'a> Simulator<'a> {
                 }
             }
         }
+    }
 
+    /// Fold this pass's per-function partial metrics into `into`, in
+    /// ascending function-id order (the bit-identical merge contract).
+    pub(crate) fn collect(&self, into: &mut SimMetrics) {
+        for st in &self.funcs {
+            into.merge(&st.metrics);
+        }
+    }
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(trace: &'a Trace, ci: &'a CarbonTrace, energy: EnergyModel, cfg: SimConfig) -> Self {
+        Simulator { trace, ci, energy, cfg }
+    }
+
+    /// Run the policy over the whole trace.
+    pub fn run(&self, policy: &mut dyn KeepAlivePolicy) -> SimResult {
+        let trace = self.trace;
+        let nf = trace.functions.len();
+        let mut latencies = Vec::new();
+        if self.cfg.track_latencies {
+            latencies.reserve(trace.invocations.len());
+        }
+        let next_arrival = if self.cfg.provide_oracle_gap {
+            next_arrival_times(trace)
+        } else {
+            Vec::new()
+        };
+
+        let mut pass = ShardPass::new(trace, self.ci, &self.energy, &self.cfg, 0..nf);
+        for (idx, inv) in trace.invocations.iter().enumerate() {
+            let na = if self.cfg.provide_oracle_gap {
+                next_arrival[idx]
+            } else {
+                f64::INFINITY
+            };
+            let e2e = pass.step(policy, inv, na);
+            if self.cfg.track_latencies {
+                latencies.push(e2e);
+            }
+        }
+
+        let t_end = pass.t_end;
+        pass.flush(policy, t_end);
+        let mut metrics = SimMetrics::new();
+        pass.collect(&mut metrics);
         SimResult { metrics, latencies }
     }
 }
@@ -329,8 +421,8 @@ mod tests {
     use crate::trace::model::{FunctionProfile, Invocation, Runtime, TriggerType};
 
     fn one_fn_trace(arrivals: &[f64], cold_s: f64, exec_s: f64) -> Trace {
-        Trace {
-            functions: vec![FunctionProfile {
+        Trace::new(
+            vec![FunctionProfile {
                 id: 0,
                 runtime: Runtime::Python,
                 trigger: TriggerType::Http,
@@ -339,11 +431,11 @@ mod tests {
                 cold_start_s: cold_s,
                 mean_exec_s: exec_s,
             }],
-            invocations: arrivals
+            arrivals
                 .iter()
                 .map(|&t| Invocation { t, func: 0, exec_s })
                 .collect(),
-        }
+        )
     }
 
     fn sim<'a>(trace: &'a Trace, ci: &'a CarbonTrace) -> Simulator<'a> {
@@ -530,6 +622,39 @@ mod tests {
         let o = &cap.0[0];
         assert!(!o.reused);
         assert!((o.cold_penalty_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tied_expiries_charge_exactly_one_cold_start() {
+        // Two concurrent arrivals at t=0 spawn two pods; same exec and the
+        // same 1 s keep-alive decision give them *tied* warm_until values.
+        // Both expire before the arrival at t=100, which is therefore cold:
+        // the 3 s penalty must be charged to exactly one of the two expired
+        // decisions, not both.
+        struct Cap(Vec<Outcome>);
+        impl KeepAlivePolicy for Cap {
+            fn name(&self) -> &str {
+                "cap"
+            }
+            fn decide(&mut self, _: &DecisionContext) -> usize {
+                0 // always 1s keep-alive
+            }
+            fn observe(&mut self, o: &Outcome) {
+                self.0.push(*o);
+            }
+        }
+        let trace = one_fn_trace(&[0.0, 0.0, 100.0], 3.0, 0.1);
+        let ci = CarbonTrace::constant(300.0);
+        let s = sim(&trace, &ci);
+        let mut cap = Cap(Vec::new());
+        s.run(&mut cap);
+        let expired: Vec<&Outcome> =
+            cap.0.iter().filter(|o| !o.reused && !o.done).collect();
+        assert_eq!(expired.len(), 2);
+        let charged: Vec<&&Outcome> =
+            expired.iter().filter(|o| o.cold_penalty_s > 0.0).collect();
+        assert_eq!(charged.len(), 1, "exactly one tied expiry takes the penalty");
+        assert!((charged[0].cold_penalty_s - 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -30,6 +30,25 @@ impl SimMetrics {
         SimMetrics { latency: Running::new(), ..Default::default() }
     }
 
+    /// Fold another run's (or function's) metrics into this one. All f64
+    /// fields are plain sums, so the fold order determines the result bits:
+    /// merging per-function partials in function-id order reproduces a
+    /// sequential per-function accumulation exactly — the reduction the
+    /// sharded simulator relies on for bit-identical results
+    /// (`simulator::sharded`).
+    pub fn merge(&mut self, other: &SimMetrics) {
+        self.invocations += other.invocations;
+        self.cold_starts += other.cold_starts;
+        self.warm_starts += other.warm_starts;
+        self.latency.merge(&other.latency);
+        self.keepalive_carbon_g += other.keepalive_carbon_g;
+        self.exec_carbon_g += other.exec_carbon_g;
+        self.cold_carbon_g += other.cold_carbon_g;
+        self.cold_latency_s += other.cold_latency_s;
+        self.idle_pod_seconds += other.idle_pod_seconds;
+        self.wasted_idle_seconds += other.wasted_idle_seconds;
+    }
+
     /// Cold-start rate in [0,1].
     pub fn cold_rate(&self) -> f64 {
         if self.invocations == 0 {
@@ -101,6 +120,24 @@ mod tests {
         assert!((m.total_carbon_g() - 45.0).abs() < 1e-12);
         assert!((m.lcp() - 22.5).abs() < 1e-12);
         assert!((m.iri() - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums_fields_and_latency() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b);
+        assert_eq!(a.invocations, 200);
+        assert_eq!(a.cold_starts, 40);
+        assert_eq!(a.latency.count, 200);
+        assert!((a.avg_latency_s() - 0.5).abs() < 1e-12);
+        assert!((a.keepalive_carbon_g - 20.0).abs() < 1e-12);
+        assert!((a.total_carbon_g() - 90.0).abs() < 1e-12);
+        // Merging empty metrics changes nothing.
+        let before = a.clone();
+        a.merge(&SimMetrics::new());
+        assert_eq!(a.keepalive_carbon_g.to_bits(), before.keepalive_carbon_g.to_bits());
+        assert_eq!(a.latency.sum.to_bits(), before.latency.sum.to_bits());
     }
 
     #[test]

@@ -9,7 +9,9 @@ pub mod metrics;
 pub mod parallel;
 pub mod pod;
 pub mod reuse;
+pub mod sharded;
 
 pub use engine::{SimConfig, SimResult, Simulator};
 pub use metrics::SimMetrics;
 pub use parallel::{BoxedPolicy, SweepCell, SweepOutcome, SweepRunner};
+pub use sharded::ShardedSimulator;

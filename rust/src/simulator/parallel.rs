@@ -16,18 +16,25 @@
 //! `rust/tests/property_parallel.rs`). No new dependencies: work stealing
 //! is an atomic cursor over the cell list, `std::thread::scope` keeps the
 //! borrows lifetimes-clean.
+//!
+//! When a sweep has fewer cells than threads, the leftover cores are
+//! granted to intra-cell *function sharding* (see
+//! [`crate::simulator::sharded`]): each cell runs under a
+//! [`ShardedSimulator`] with `threads / workers` shards, so a 2-cell sweep
+//! on a 16-core box still uses the machine. Floor division guarantees
+//! `workers × intra ≤ threads` (no oversubscription), and sharded replay
+//! is bit-identical to sequential, so sweep results are unchanged.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
-use crate::policy::KeepAlivePolicy;
-use crate::simulator::engine::{SimConfig, SimResult, Simulator};
+use crate::simulator::engine::{SimConfig, SimResult};
+use crate::simulator::sharded::ShardedSimulator;
 use crate::trace::model::Trace;
 
-/// A heap-allocated policy that may cross the worker→caller thread boundary.
-pub type BoxedPolicy = Box<dyn KeepAlivePolicy + Send>;
+pub use crate::policy::BoxedPolicy;
 
 /// Builds a fresh policy instance for one sweep cell. Called exactly once
 /// per cell, on the worker thread that executes it — stateful policies
@@ -154,6 +161,11 @@ impl<'a> SweepRunner<'a> {
             (0..n).map(|_| Mutex::new(None)).collect();
         let cursor = AtomicUsize::new(0);
         let workers = self.threads.min(n);
+        // When there are fewer cells than threads, grant the leftover cores
+        // to intra-cell function sharding (oversubscription guard: floor
+        // division keeps workers × intra ≤ threads). Sharded replay is
+        // bit-identical to sequential, so results don't depend on `intra`.
+        let intra = (self.threads / workers).max(1);
         let cells = &cells;
         let slots_ref = &slots;
         let cursor_ref = &cursor;
@@ -165,12 +177,13 @@ impl<'a> SweepRunner<'a> {
             }
             let cell = &cells[i];
             let mut policy = (cell.factory)();
-            let sim = Simulator::new(
+            let sim = ShardedSimulator::new(
                 cell.trace.unwrap_or(self.trace),
                 cell.ci.unwrap_or(self.ci),
                 cell.energy.clone().unwrap_or_else(|| self.energy.clone()),
                 cell.cfg.clone(),
-            );
+            )
+            .with_shards(intra);
             let result = sim.run(policy.as_mut());
             *slots_ref[i].lock().unwrap() =
                 Some(SweepOutcome { label: cell.label.clone(), result, policy });
@@ -255,10 +268,10 @@ mod tests {
     #[test]
     fn per_cell_overrides_apply() {
         let trace = small_trace(3);
-        let short = Trace {
-            functions: trace.functions.clone(),
-            invocations: trace.invocations.iter().take(10).copied().collect(),
-        };
+        let short = Trace::new(
+            trace.functions.clone(),
+            trace.invocations.iter().take(10).copied().collect(),
+        );
         let ci = CarbonTrace::constant(300.0);
         let flat = CarbonTrace::constant(600.0);
         let runner = SweepRunner::new(&trace, &ci, EnergyModel::default()).with_threads(2);

@@ -1,0 +1,244 @@
+//! Function-sharded parallel replay of a single simulation run.
+//!
+//! `simulator::parallel::SweepRunner` parallelizes *across* runs; this
+//! module parallelizes *within* one. The trace's functions are partitioned
+//! into K contiguous-by-id shards (`Trace::shard_index`, built once and
+//! cached), each shard replays its arrival-ordered sub-stream on its own
+//! scoped thread against a policy instance from `KeepAlivePolicy::fork`,
+//! and the per-shard results are merged deterministically:
+//!
+//! * metrics fold per-function partials in ascending function-id order
+//!   (contiguous shard ranges concatenate to exactly the sequential fold);
+//! * the end-of-trace flush runs serially against the global `t_end`
+//!   (max over shards);
+//! * tracked latencies scatter back to global arrival order through the
+//!   invocation indices stored in the shard index.
+//!
+//! Result: bit-identical output to [`Simulator::run`] for every policy
+//! that forks (property-tested in `rust/tests/property_sharded.rs`).
+//! Policies that return `None` from `fork` — and traces with fewer than two
+//! functions — fall back to the sequential path transparently.
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::energy::model::EnergyModel;
+use crate::policy::{BoxedPolicy, KeepAlivePolicy};
+use crate::simulator::engine::{next_arrival_times, ShardPass, SimConfig, SimResult, Simulator};
+use crate::simulator::metrics::SimMetrics;
+use crate::trace::model::Trace;
+
+/// Environment override for the shard count (`0`/`1` force sequential).
+pub const SHARDS_ENV: &str = "LACE_SIM_SHARDS";
+
+/// A single-run simulator that replays disjoint function shards in
+/// parallel. Drop-in for [`Simulator`]: same inputs, bit-identical output.
+pub struct ShardedSimulator<'a> {
+    pub trace: &'a Trace,
+    pub ci: &'a CarbonTrace,
+    pub energy: EnergyModel,
+    pub cfg: SimConfig,
+    shards: usize,
+}
+
+impl<'a> ShardedSimulator<'a> {
+    /// Shard count from `LACE_SIM_SHARDS`, else available parallelism.
+    pub fn new(trace: &'a Trace, ci: &'a CarbonTrace, energy: EnergyModel, cfg: SimConfig) -> Self {
+        let shards = std::env::var(SHARDS_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .max(1);
+        ShardedSimulator { trace, ci, energy, cfg, shards }
+    }
+
+    /// Fix the shard count explicitly (clamped to at least 1).
+    pub fn with_shards(mut self, k: usize) -> Self {
+        self.shards = k.max(1);
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn run_sequential(&self, policy: &mut dyn KeepAlivePolicy) -> SimResult {
+        Simulator::new(self.trace, self.ci, self.energy.clone(), self.cfg.clone()).run(policy)
+    }
+
+    /// Run the policy over the whole trace, sharded across threads when the
+    /// policy forks and more than one shard is useful.
+    pub fn run(&self, policy: &mut dyn KeepAlivePolicy) -> SimResult {
+        let trace = self.trace;
+        let nf = trace.functions.len();
+        let k = self.shards.min(nf).max(1);
+        if k <= 1 || trace.is_empty() {
+            return self.run_sequential(policy);
+        }
+        // All-or-nothing fork: a policy that cannot shard keeps the
+        // sequential semantics it asked for.
+        let mut forks: Vec<BoxedPolicy> = Vec::with_capacity(k);
+        for _ in 0..k {
+            match policy.fork() {
+                Some(f) => forks.push(f),
+                None => return self.run_sequential(policy),
+            }
+        }
+
+        let index = trace.shard_index(k);
+        let next_arrival = if self.cfg.provide_oracle_gap {
+            next_arrival_times(trace)
+        } else {
+            Vec::new()
+        };
+        let ci = self.ci;
+        let energy = &self.energy;
+        let cfg = &self.cfg;
+        let index_ref = &*index;
+        let next_arrival_ref = &next_arrival;
+
+        // Phase 1: parallel main pass, one thread per shard.
+        let mut results: Vec<(ShardPass<'_>, Vec<f64>, BoxedPolicy)> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = forks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(si, mut fork)| {
+                        s.spawn(move || {
+                            let mut pass = ShardPass::new(
+                                trace,
+                                ci,
+                                energy,
+                                cfg,
+                                index_ref.func_ranges[si].clone(),
+                            );
+                            let list = &index_ref.invocations[si];
+                            let mut lats = if cfg.track_latencies {
+                                Vec::with_capacity(list.len())
+                            } else {
+                                Vec::new()
+                            };
+                            for &gi in list {
+                                let na = if cfg.provide_oracle_gap {
+                                    next_arrival_ref[gi as usize]
+                                } else {
+                                    f64::INFINITY
+                                };
+                                let e2e = pass.step(
+                                    fork.as_mut(),
+                                    &trace.invocations[gi as usize],
+                                    na,
+                                );
+                                if cfg.track_latencies {
+                                    lats.push(e2e);
+                                }
+                            }
+                            (pass, lats, fork)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+        // Phase 2: serial merge in shard (= function-id) order. The flush
+        // needs the global t_end, so it cannot run inside the shards.
+        let t_end = results.iter().fold(0.0f64, |acc, (p, _, _)| acc.max(p.t_end));
+        let mut metrics = SimMetrics::new();
+        let mut latencies = if self.cfg.track_latencies {
+            vec![0.0; trace.invocations.len()]
+        } else {
+            Vec::new()
+        };
+        for (si, (pass, lats, fork)) in results.iter_mut().enumerate() {
+            pass.flush(fork.as_mut(), t_end);
+            pass.collect(&mut metrics);
+            if self.cfg.track_latencies {
+                for (&gi, &l) in index.invocations[si].iter().zip(lats.iter()) {
+                    latencies[gi as usize] = l;
+                }
+            }
+            policy.absorb(fork.as_mut());
+        }
+        SimResult { metrics, latencies }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::fixed::FixedTimeout;
+    use crate::trace::synth::{SynthConfig, TraceGenerator};
+
+    fn mk(seed: u64) -> Trace {
+        TraceGenerator::new(SynthConfig::small(seed)).generate()
+    }
+
+    #[test]
+    fn sharded_matches_sequential_fixed_policy() {
+        let trace = mk(5);
+        let ci = CarbonTrace::constant(320.0);
+        let cfg = SimConfig { track_latencies: true, ..SimConfig::default() };
+        let seq = Simulator::new(&trace, &ci, EnergyModel::default(), cfg.clone())
+            .run(&mut FixedTimeout::huawei());
+        for k in [1, 2, 3] {
+            let sh = ShardedSimulator::new(&trace, &ci, EnergyModel::default(), cfg.clone())
+                .with_shards(k)
+                .run(&mut FixedTimeout::huawei());
+            assert_eq!(seq.metrics.cold_starts, sh.metrics.cold_starts, "k={k}");
+            assert_eq!(
+                seq.metrics.keepalive_carbon_g.to_bits(),
+                sh.metrics.keepalive_carbon_g.to_bits(),
+                "k={k}"
+            );
+            assert_eq!(seq.latencies.len(), sh.latencies.len());
+            for (a, b) in seq.latencies.iter().zip(sh.latencies.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_forkable_policy_falls_back() {
+        struct NoFork;
+        impl KeepAlivePolicy for NoFork {
+            fn name(&self) -> &str {
+                "no-fork"
+            }
+            fn decide(&mut self, _: &crate::policy::DecisionContext) -> usize {
+                0
+            }
+        }
+        let trace = mk(6);
+        let ci = CarbonTrace::constant(320.0);
+        let seq = Simulator::new(&trace, &ci, EnergyModel::default(), SimConfig::default())
+            .run(&mut NoFork);
+        let sh = ShardedSimulator::new(&trace, &ci, EnergyModel::default(), SimConfig::default())
+            .with_shards(4)
+            .run(&mut NoFork);
+        assert_eq!(seq.metrics.cold_starts, sh.metrics.cold_starts);
+        assert_eq!(
+            seq.metrics.total_carbon_g().to_bits(),
+            sh.metrics.total_carbon_g().to_bits()
+        );
+    }
+
+    #[test]
+    fn more_shards_than_functions_clamps() {
+        let trace = mk(7);
+        let ci = CarbonTrace::constant(320.0);
+        let sim = ShardedSimulator::new(&trace, &ci, EnergyModel::default(), SimConfig::default())
+            .with_shards(10_000);
+        let r = sim.run(&mut FixedTimeout::huawei());
+        assert_eq!(r.metrics.invocations as usize, trace.len());
+    }
+
+    #[test]
+    fn empty_trace_is_fine() {
+        let trace = Trace::default();
+        let ci = CarbonTrace::constant(320.0);
+        let r = ShardedSimulator::new(&trace, &ci, EnergyModel::default(), SimConfig::default())
+            .with_shards(4)
+            .run(&mut FixedTimeout::huawei());
+        assert_eq!(r.metrics.invocations, 0);
+    }
+}

@@ -87,7 +87,7 @@ pub fn from_table(table: &Table) -> anyhow::Result<Trace> {
     }
 
     invocations.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
-    let trace = Trace { functions, invocations };
+    let trace = Trace::new(functions, invocations);
     trace.assert_sorted();
     Ok(trace)
 }

@@ -116,15 +116,89 @@ pub struct Invocation {
     pub exec_s: f64,
 }
 
+/// Pre-computed partition of a trace into K contiguous-by-function-id
+/// shards, for `simulator::sharded::ShardedSimulator`. Built once per
+/// (trace, K) and cached on the [`Trace`].
+#[derive(Debug)]
+pub struct ShardIndex {
+    /// Shard count this index was built for.
+    pub k: usize,
+    /// Function-id range of each shard; contiguous, covering `0..nf`.
+    pub func_ranges: Vec<std::ops::Range<usize>>,
+    /// Per shard, indices into `Trace::invocations` in arrival order —
+    /// concatenating restores the full sorted stream when filtered back.
+    pub invocations: Vec<Vec<u32>>,
+}
+
+impl ShardIndex {
+    fn build(trace: &Trace, k: usize) -> ShardIndex {
+        let nf = trace.functions.len();
+        assert!(k >= 1 && k <= nf.max(1));
+        assert!(
+            trace.invocations.len() <= u32::MAX as usize,
+            "shard index stores u32 invocation indices"
+        );
+        let func_ranges: Vec<std::ops::Range<usize>> =
+            (0..k).map(|s| s * nf / k..(s + 1) * nf / k).collect();
+        let mut shard_of = vec![0u32; nf];
+        for (s, r) in func_ranges.iter().enumerate() {
+            for f in r.clone() {
+                shard_of[f] = s as u32;
+            }
+        }
+        let mut invocations = vec![Vec::new(); k];
+        // One forward scan: per-shard lists inherit global arrival order.
+        for (i, inv) in trace.invocations.iter().enumerate() {
+            invocations[shard_of[inv.func as usize] as usize].push(i as u32);
+        }
+        ShardIndex { k, func_ranges, invocations }
+    }
+}
+
+/// Lazily-built `k -> ShardIndex` cache. Cloning a trace clones the data
+/// but starts the cache cold — an index is only valid for the exact
+/// invocation list it was built from, and the fields it indexes may be
+/// edited on the clone.
+#[derive(Debug, Default)]
+pub struct ShardCache(
+    std::sync::Mutex<std::collections::HashMap<usize, std::sync::Arc<ShardIndex>>>,
+);
+
+impl Clone for ShardCache {
+    fn clone(&self) -> Self {
+        ShardCache::default()
+    }
+}
+
 /// A complete workload trace: function table + time-ordered invocations.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
     pub functions: Vec<FunctionProfile>,
     /// Sorted by `t` ascending (enforced by loaders/generators).
     pub invocations: Vec<Invocation>,
+    /// Private so every construction goes through [`Trace::new`] — direct
+    /// field edits after construction would silently invalidate it anyway
+    /// (the cache is keyed on the invocation list's content).
+    shard_cache: ShardCache,
 }
 
 impl Trace {
+    pub fn new(functions: Vec<FunctionProfile>, invocations: Vec<Invocation>) -> Trace {
+        Trace { functions, invocations, shard_cache: ShardCache::default() }
+    }
+
+    /// Shard partition for `k` shards, built on first use and cached.
+    /// `k` is clamped to `[1, nf]` by callers; repeated runs at the same
+    /// shard count (sweeps, training episodes) pay the split once.
+    pub fn shard_index(&self, k: usize) -> std::sync::Arc<ShardIndex> {
+        let mut cache = self.shard_cache.0.lock().unwrap();
+        std::sync::Arc::clone(
+            cache
+                .entry(k)
+                .or_insert_with(|| std::sync::Arc::new(ShardIndex::build(self, k))),
+        )
+    }
+
     pub fn len(&self) -> usize {
         self.invocations.len()
     }
@@ -160,10 +234,7 @@ impl Trace {
         let n = self.invocations.len();
         let n_train = (n as f64 * train) as usize;
         let n_valid = (n as f64 * valid) as usize;
-        let mk = |slice: &[Invocation]| Trace {
-            functions: self.functions.clone(),
-            invocations: slice.to_vec(),
-        };
+        let mk = |slice: &[Invocation]| Trace::new(self.functions.clone(), slice.to_vec());
         (
             mk(&self.invocations[..n_train]),
             mk(&self.invocations[n_train..n_train + n_valid]),
@@ -179,15 +250,14 @@ impl Trace {
             .iter()
             .map(|f| f.cold_start_s >= thresh_s)
             .collect();
-        Trace {
-            functions: self.functions.clone(),
-            invocations: self
-                .invocations
+        Trace::new(
+            self.functions.clone(),
+            self.invocations
                 .iter()
                 .filter(|i| keep[i.func as usize])
                 .copied()
                 .collect(),
-        }
+        )
     }
 }
 
@@ -219,7 +289,7 @@ mod tests {
         let invocations = (0..10)
             .map(|i| Invocation { t: i as f64, func: (i % 2) as u32, exec_s: 0.1 })
             .collect();
-        Trace { functions, invocations }
+        Trace::new(functions, invocations)
     }
 
     #[test]
@@ -262,5 +332,42 @@ mod tests {
         let t = tiny_trace();
         assert_eq!(t.duration_s(), 9.0);
         assert_eq!(Trace::default().duration_s(), 0.0);
+    }
+
+    #[test]
+    fn shard_index_partitions_functions_and_invocations() {
+        let t = tiny_trace();
+        for k in [1, 2] {
+            let idx = t.shard_index(k);
+            assert_eq!(idx.k, k);
+            // Ranges are contiguous and cover 0..nf.
+            assert_eq!(idx.func_ranges[0].start, 0);
+            assert_eq!(idx.func_ranges[k - 1].end, t.functions.len());
+            for w in idx.func_ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // Every invocation lands in exactly one shard, arrival-ordered.
+            let total: usize = idx.invocations.iter().map(|v| v.len()).sum();
+            assert_eq!(total, t.len());
+            for (s, list) in idx.invocations.iter().enumerate() {
+                for w in list.windows(2) {
+                    assert!(t.invocations[w[0] as usize].t <= t.invocations[w[1] as usize].t);
+                }
+                for &i in list {
+                    let f = t.invocations[i as usize].func as usize;
+                    assert!(idx.func_ranges[s].contains(&f));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_index_is_cached_and_clone_starts_cold() {
+        let t = tiny_trace();
+        let a = t.shard_index(2);
+        let b = t.shard_index(2);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        let c = t.clone().shard_index(2);
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
     }
 }

@@ -105,7 +105,7 @@ mod tests {
             invocations.push(Invocation { t: 10.0 * i as f64, func: 1, exec_s: 0.1 });
         }
         invocations.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
-        Trace { functions: vec![mk(0, 0.5, 50.0), mk(1, 5.0, 200.0)], invocations }
+        Trace::new(vec![mk(0, 0.5, 50.0), mk(1, 5.0, 200.0)], invocations)
     }
 
     #[test]

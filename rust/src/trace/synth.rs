@@ -122,7 +122,7 @@ impl TraceGenerator {
             self.gen_arrivals(f, *kind, &mut frng, &mut invocations);
         }
         invocations.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
-        let trace = Trace { functions, invocations };
+        let trace = Trace::new(functions, invocations);
         trace.assert_sorted();
         trace
     }

@@ -41,6 +41,15 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Stateless substream derivation: a generator determined only by
+    /// (`seed`, `stream`), consuming nothing from a parent. Stochastic
+    /// policies key one stream per function id so their decision sequences
+    /// depend only on that function's own history — invariant under any
+    /// sharding of the trace across threads (`simulator::sharded`).
+    pub fn stream(seed: u64, stream: u64) -> Rng {
+        Rng::new(seed ^ stream.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -326,6 +335,18 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn stream_is_stateless_and_decorrelated() {
+        let mut a = Rng::stream(7, 3);
+        let mut b = Rng::stream(7, 3);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::stream(7, 4);
+        let same = (0..64).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert!(same < 2);
     }
 
     #[test]

@@ -185,6 +185,21 @@ impl Running {
             self.sum / self.count as f64
         }
     }
+
+    /// Fold another accumulator into this one. Addition order is
+    /// caller-controlled: folding per-function partials in function-id
+    /// order reproduces a sequential accumulation bit-for-bit (the
+    /// sharded-simulation merge contract, see `simulator::sharded`).
+    pub fn merge(&mut self, other: &Running) {
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +260,32 @@ mod tests {
         assert_eq!(h.counts()[0], 2);
         assert_eq!(h.counts()[9], 2);
         assert!((h.cdf_at(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_merge_matches_sequential_adds() {
+        let xs = [3.0, -1.0, 7.0, 2.5, 0.0, 9.5];
+        let mut whole = Running::new();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let (mut a, mut b) = (Running::new(), Running::new());
+        for &x in &xs[..3] {
+            a.add(x);
+        }
+        for &x in &xs[3..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, whole.count);
+        assert_eq!(a.sum.to_bits(), whole.sum.to_bits());
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+        // Merging an empty accumulator is a no-op.
+        let before = a.clone();
+        a.merge(&Running::new());
+        assert_eq!(a.sum.to_bits(), before.sum.to_bits());
+        assert_eq!(a.min, before.min);
     }
 
     #[test]

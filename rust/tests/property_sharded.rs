@@ -1,0 +1,242 @@
+//! Property: function-sharded replay is a pure speedup — for every policy
+//! that forks, [`ShardedSimulator`] must return metrics **and** tracked
+//! latencies bit-identical to a sequential [`Simulator::run`] with an
+//! identically-constructed fresh policy, for every shard count. The thread
+//! count may reorder execution, never results.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::lace_rl::LaceRlPolicy;
+use lace_rl::policy::native_mlp::NativeMlp;
+use lace_rl::policy::{BoxedPolicy, CarbonMin, FixedTimeout, LatencyMin, Oracle};
+use lace_rl::prop_assert;
+use lace_rl::rl::agent::EpsilonGreedyAgent;
+use lace_rl::rl::encoder::STATE_DIM;
+use lace_rl::rl::qnet::QNetParams;
+use lace_rl::simulator::engine::{SimConfig, SimResult, Simulator};
+use lace_rl::simulator::sharded::ShardedSimulator;
+use lace_rl::trace::model::Trace;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+fn small_trace(rng: &mut Rng) -> Trace {
+    let cfg = SynthConfig {
+        n_functions: 8 + rng.index(30),
+        duration_s: 600.0 + rng.f64() * 1200.0,
+        target_invocations: 2_000 + rng.index(5_000),
+        seed: rng.next_u64(),
+        ..SynthConfig::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+fn random_ci(rng: &mut Rng) -> CarbonTrace {
+    match rng.index(2) {
+        0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+        _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+    }
+}
+
+/// Small random Q-network so the LACE-RL cell exercises non-trivial argmax
+/// paths (zero weights would tie every action).
+fn random_params(rng: &mut Rng) -> QNetParams {
+    let mut p = QNetParams::zeros((STATE_DIM, 8, 8, 5));
+    for t in p.tensors_mut() {
+        for w in t.iter_mut() {
+            *w = (rng.f64() * 2.0 - 1.0) as f32;
+        }
+    }
+    p
+}
+
+/// Every shipped forkable policy; the bool marks Oracle cells needing the
+/// clairvoyant next-arrival gap.
+#[allow(clippy::type_complexity)]
+fn policy_grid(rng: &mut Rng) -> Vec<(&'static str, bool, Box<dyn Fn() -> BoxedPolicy>)> {
+    let params = random_params(rng);
+    vec![
+        ("huawei-60s", false, Box::new(|| Box::new(FixedTimeout::huawei()) as BoxedPolicy)),
+        ("fixed-10s", false, Box::new(|| Box::new(FixedTimeout::new(10.0)) as BoxedPolicy)),
+        ("latency-min", false, Box::new(|| Box::new(LatencyMin) as BoxedPolicy)),
+        ("carbon-min", false, Box::new(|| Box::new(CarbonMin) as BoxedPolicy)),
+        (
+            "dpso-ecolife",
+            false,
+            Box::new(|| Box::new(Dpso::new(DpsoConfig::default())) as BoxedPolicy),
+        ),
+        ("oracle", true, Box::new(|| Box::new(Oracle) as BoxedPolicy)),
+        (
+            "lace-rl",
+            false,
+            Box::new(move || {
+                Box::new(LaceRlPolicy::new(NativeMlp::new(params.clone()))) as BoxedPolicy
+            }),
+        ),
+    ]
+}
+
+/// Bit-level equality of two simulation results.
+fn assert_same(name: &str, k: usize, seq: &SimResult, sh: &SimResult) -> Result<(), String> {
+    let (a, b) = (&seq.metrics, &sh.metrics);
+    prop_assert!(
+        a.invocations == b.invocations
+            && a.cold_starts == b.cold_starts
+            && a.warm_starts == b.warm_starts,
+        "{name} k={k}: counts {}/{}/{} vs {}/{}/{}",
+        a.invocations,
+        a.cold_starts,
+        a.warm_starts,
+        b.invocations,
+        b.cold_starts,
+        b.warm_starts
+    );
+    for (field, x, y) in [
+        ("keepalive_carbon_g", a.keepalive_carbon_g, b.keepalive_carbon_g),
+        ("exec_carbon_g", a.exec_carbon_g, b.exec_carbon_g),
+        ("cold_carbon_g", a.cold_carbon_g, b.cold_carbon_g),
+        ("cold_latency_s", a.cold_latency_s, b.cold_latency_s),
+        ("idle_pod_seconds", a.idle_pod_seconds, b.idle_pod_seconds),
+        ("wasted_idle_seconds", a.wasted_idle_seconds, b.wasted_idle_seconds),
+        ("latency_sum", a.latency.sum, b.latency.sum),
+    ] {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{name} k={k}: {field} differs: {x:e} vs {y:e}"
+        );
+    }
+    prop_assert!(
+        seq.latencies.len() == sh.latencies.len(),
+        "{name} k={k}: latency count {} vs {}",
+        seq.latencies.len(),
+        sh.latencies.len()
+    );
+    for (i, (x, y)) in seq.latencies.iter().zip(sh.latencies.iter()).enumerate() {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{name} k={k}: latency[{i}] differs: {x:e} vs {y:e}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn sharded_replay_bit_identical_to_sequential() {
+    forall("sharded run == sequential run", 4, 211, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let lambda = *rng.choice(&[0.2, 0.5, 0.8]);
+        let nf = trace.functions.len();
+
+        for (name, oracle_gap, factory) in policy_grid(rng) {
+            let cfg = SimConfig {
+                lambda_carbon: lambda,
+                provide_oracle_gap: oracle_gap,
+                track_latencies: true,
+                ..SimConfig::default()
+            };
+            let mut policy = factory();
+            let seq = Simulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                .run(policy.as_mut());
+            for k in [1usize, 2, 7, nf] {
+                let mut policy = factory();
+                let sh = ShardedSimulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                    .with_shards(k)
+                    .run(policy.as_mut());
+                assert_same(name, k, &seq, &sh)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn training_agent_rollout_is_shard_invariant() {
+    // The ε-greedy trainer agent is the hard case: stochastic exploration
+    // plus harvested transitions. Per-function RNG streams and canonical
+    // drain order must make both ends of the rollout — metrics *and* the
+    // replay stream — independent of the shard count.
+    forall("agent rollout shard-invariant", 3, 212, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let params = random_params(rng);
+        let seed = rng.next_u64();
+        let cfg = SimConfig { track_latencies: true, ..SimConfig::default() };
+
+        let mut seq_agent = EpsilonGreedyAgent::new(NativeMlp::new(params.clone()), 0.3, seed);
+        let seq = Simulator::new(&trace, &ci, energy.clone(), cfg.clone()).run(&mut seq_agent);
+        let seq_transitions = seq_agent.take_transitions();
+
+        for k in [2usize, 7] {
+            let mut agent = EpsilonGreedyAgent::new(NativeMlp::new(params.clone()), 0.3, seed);
+            let sh = ShardedSimulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                .with_shards(k)
+                .run(&mut agent);
+            assert_same("epsilon-greedy", k, &seq, &sh)?;
+            prop_assert!(
+                agent.decisions == seq_agent.decisions,
+                "k={k}: decisions {} vs {}",
+                agent.decisions,
+                seq_agent.decisions
+            );
+            // Summed per shard then merged, so only approximately equal.
+            prop_assert!(
+                (agent.episode_reward - seq_agent.episode_reward).abs()
+                    <= 1e-9 * (1.0 + seq_agent.episode_reward.abs()),
+                "k={k}: episode reward {} vs {}",
+                agent.episode_reward,
+                seq_agent.episode_reward
+            );
+            let transitions = agent.take_transitions();
+            prop_assert!(
+                transitions == seq_transitions,
+                "k={k}: replay stream differs ({} vs {} transitions)",
+                transitions.len(),
+                seq_transitions.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_traces_and_shard_counts() {
+    // Empty trace: nothing to do, any shard count.
+    let empty = Trace::default();
+    let ci = CarbonTrace::constant(300.0);
+    for k in [1usize, 4] {
+        let r = ShardedSimulator::new(&empty, &ci, EnergyModel::default(), SimConfig::default())
+            .with_shards(k)
+            .run(&mut FixedTimeout::huawei());
+        assert_eq!(r.metrics.invocations, 0);
+    }
+
+    // Single-function trace: clamps to one shard, still sequential-equal.
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 1,
+        duration_s: 600.0,
+        target_invocations: 500,
+        seed: 13,
+        ..SynthConfig::default()
+    })
+    .generate();
+    let cfg = SimConfig { track_latencies: true, ..SimConfig::default() };
+    let seq = Simulator::new(&trace, &ci, EnergyModel::default(), cfg.clone())
+        .run(&mut FixedTimeout::huawei());
+    // More shards than functions: clamps to nf, still sequential-equal.
+    for k in [1usize, 3, 64] {
+        let sh = ShardedSimulator::new(&trace, &ci, EnergyModel::default(), cfg.clone())
+            .with_shards(k)
+            .run(&mut FixedTimeout::huawei());
+        assert_eq!(seq.metrics.cold_starts, sh.metrics.cold_starts);
+        assert_eq!(
+            seq.metrics.total_carbon_g().to_bits(),
+            sh.metrics.total_carbon_g().to_bits()
+        );
+        assert_eq!(seq.latencies.len(), sh.latencies.len());
+    }
+}

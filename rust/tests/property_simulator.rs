@@ -215,7 +215,7 @@ fn serialized_trace(rng: &mut Rng) -> lace_rl::trace::model::Trace {
         }
     }
     invocations.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
-    Trace { functions, invocations }
+    Trace::new(functions, invocations)
 }
 
 #[test]

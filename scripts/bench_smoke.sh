@@ -25,3 +25,17 @@ else
     echo "error: bench did not write BENCH_sim.json" >&2
     exit 1
 fi
+
+# Sharded replay must be a pure speedup: the same simulate run forced
+# sequential (LACE_SIM_SHARDS=1) and sharded (=4) must print identical
+# metrics, character for character.
+echo "== sharded equivalence smoke (LACE_SIM_SHARDS 1 vs 4) =="
+seq_out=$(LACE_SIM_SHARDS=1 cargo run --release --quiet --bin lace-rl -- simulate --quick --policy huawei)
+par_out=$(LACE_SIM_SHARDS=4 cargo run --release --quiet --bin lace-rl -- simulate --quick --policy huawei)
+if [[ "$seq_out" != "$par_out" ]]; then
+    echo "error: sharded simulate output diverged from sequential" >&2
+    diff <(echo "$seq_out") <(echo "$par_out") >&2 || true
+    exit 1
+fi
+echo "$par_out"
+echo "sharded output identical to sequential"
