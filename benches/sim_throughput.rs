@@ -132,6 +132,24 @@ fn main() -> anyhow::Result<()> {
         report.add(s);
     }
 
+    // Telemetry overhead: the same sequential fixed-60s run with obs
+    // collection forced on (per-run SimConfig flag; the global sink stays
+    // uninstalled so the rest of this bench is unaffected). The delta vs
+    // `sim/fixed-60s` is the enabled-collection cost; the disabled cost is
+    // zero by construction (a branch over a constant-false flag) and is
+    // regression-gated against BENCH_sim.json by scripts/bench_smoke.sh.
+    println!("== obs collection overhead (fixed-60s) ==\n");
+    {
+        let obs_cfg = SimConfig { collect_obs: true, ..SimConfig::default() };
+        let sim = Simulator::new(&trace, &ci, energy.clone(), obs_cfg);
+        let s = bench_once("sim/fixed-60s-obs", samples, || {
+            let mut policy = FixedTimeout::huawei();
+            black_box(sim.run(&mut policy).metrics.cold_starts);
+        });
+        println!("  -> {:.2}M invocations/s (collection on)\n", n / (s.median_ns / 1e9) / 1e6);
+        report.add(s);
+    }
+
     println!("== per-invocation pieces ==\n");
     // State encoding.
     let prof = trace.functions[0].clone();

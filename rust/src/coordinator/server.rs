@@ -77,6 +77,7 @@ impl CoordinatorServer {
         pace: Pace,
         queue_depth: usize,
     ) -> anyhow::Result<(ServeReport, P)> {
+        let _serve_span = crate::obs::span("coordinator/serve");
         let router = Router::new(trace.functions.clone(), policy, ci, energy, cfg);
         let (req_tx, req_rx) = sync_channel(queue_depth);
         let (resp_tx, resp_rx) = channel();
@@ -104,6 +105,15 @@ impl CoordinatorServer {
             sent,
             router.metrics.requests
         );
+        // Build the decision-latency histogram before the ECDF consumes
+        // the sample vector (telemetry only; skipped when obs is off).
+        let decision_hist = crate::obs::sink().map(|_| {
+            let mut h = crate::obs::Hist::new();
+            for &us in &decision_us {
+                h.record(us / 1e6);
+            }
+            h
+        });
         let p99 = if decision_us.is_empty() {
             0.0
         } else {
@@ -111,6 +121,36 @@ impl CoordinatorServer {
         };
         let (policy, metrics) = router.into_parts();
         let report = ServeReport::from_metrics(&metrics, wall, p99);
+        if let Some(sink) = crate::obs::sink() {
+            use crate::util::json::Json;
+            sink.add_counter("serve/requests", report.requests);
+            sink.add_counter("serve/cold_starts", report.cold_starts);
+            let mut lines = vec![
+                Json::obj(vec![
+                    ("kind", "meta".into()),
+                    ("stream", "serve".into()),
+                    ("policy", policy.name().into()),
+                ]),
+                Json::obj(vec![
+                    ("kind", "serve-report".into()),
+                    ("requests", report.requests.into()),
+                    ("cold_starts", report.cold_starts.into()),
+                    ("wall_s", report.wall_s.into()),
+                    ("throughput_rps", report.throughput_rps.into()),
+                    ("mean_latency_s", report.mean_latency_s.into()),
+                    ("mean_decision_us", report.mean_decision_us.into()),
+                    ("p99_decision_us", report.p99_decision_us.into()),
+                    ("keepalive_carbon_g", report.keepalive_carbon_g.into()),
+                ]),
+            ];
+            if let Some(h) = &decision_hist {
+                lines.push(h.to_json("decision_s"));
+            }
+            let stream = format!("serve_{}", policy.name());
+            if let Err(e) = sink.emit_jsonl(&stream, &lines) {
+                eprintln!("[obs] failed to write serve telemetry: {e}");
+            }
+        }
         Ok((report, policy))
     }
 }

@@ -18,7 +18,7 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
         w.general.duration_s() / 3600.0,
         w.general.functions.len()
     );
-    let cmp = compare(&w.general, &w, 0.5)?;
+    let cmp = compare(&w.general, &w, 0.5, "general")?;
 
     println!("\nFig 5 — absolute metrics:");
     print!("{}", cmp.table());
@@ -52,11 +52,14 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
 
 /// Run the standard five-policy comparison (Oracle excluded here; it gets
 /// its own Table III experiment). All five cells execute in parallel on the
-/// sweep runner; results are deterministic and ordered.
+/// sweep runner; results are deterministic and ordered. `name` labels the
+/// workload in the comparison and in the per-policy telemetry streams
+/// (`results/obs/<name>_<policy>.jsonl` when an obs sink is installed).
 pub fn compare(
     trace: &crate::trace::model::Trace,
     w: &workload::Workload,
     lambda: f64,
+    name: &str,
 ) -> anyhow::Result<Comparison> {
     let params = workload::lace_rl_params()?;
     let cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
@@ -74,8 +77,11 @@ pub fn compare(
         }),
     ];
     let runner = SweepRunner::new(trace, &w.ci, w.energy.clone());
-    let mut cmp = Comparison::new("general");
+    let mut cmp = Comparison::new(name);
     for outcome in runner.run(cells) {
+        if let Some(obs) = &outcome.result.obs {
+            crate::obs::emit_sim(&format!("{name}_{}", outcome.label), obs);
+        }
         cmp.add(&outcome.label, outcome.result.metrics);
     }
     Ok(cmp)

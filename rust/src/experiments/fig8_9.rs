@@ -14,7 +14,7 @@ pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
         workload::LONG_TAIL_THRESH_S,
         100.0 * w.long_tailed.len() as f64 / w.general.len().max(1) as f64
     );
-    let cmp = compare(&w.long_tailed, &w, 0.5)?;
+    let cmp = compare(&w.long_tailed, &w, 0.5, "long-tailed")?;
 
     println!("\nFig 8 — absolute metrics:");
     print!("{}", cmp.table());

@@ -26,8 +26,21 @@ pub const ALL: [&str; 13] = [
 ];
 
 /// Dispatch an experiment by id. `seed` pins the synthetic workload;
-/// `quick` shrinks the workload for smoke runs.
+/// `quick` shrinks the workload for smoke runs. When an [`crate::obs`]
+/// sink is installed (`--obs`), a telemetry summary table prints after
+/// the experiment completes.
 pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
+    let r = dispatch(id, seed, quick);
+    if let Some(sink) = crate::obs::sink() {
+        let summary = sink.summary();
+        if !summary.is_empty() {
+            print!("\n{summary}");
+        }
+    }
+    r
+}
+
+fn dispatch(id: &str, seed: u64, quick: bool) -> Result<()> {
     match id {
         "fig1" => fig1::run(seed, quick),
         "fig2" => fig2::run(seed, quick),
@@ -49,7 +62,9 @@ pub fn run(id: &str, seed: u64, quick: bool) -> Result<()> {
             ] {
                 println!("\n================ experiment {e} ================");
                 let t0 = std::time::Instant::now();
-                run(e, seed, quick)?;
+                // dispatch, not run: counters are cumulative, so `all`
+                // prints one telemetry summary at the end, not ten.
+                dispatch(e, seed, quick)?;
                 println!("[{e} done in {:.2}s]", t0.elapsed().as_secs_f64());
             }
             println!(

@@ -63,9 +63,28 @@ pub fn build(seed: u64, quick: bool) -> Workload {
     }
 }
 
-/// Run one policy over a trace with the standard evaluation config.
-/// Single runs are function-sharded across the machine's cores
-/// (bit-identical to sequential; `LACE_SIM_SHARDS=1` forces sequential).
+/// Run one policy over a trace with the standard evaluation config and
+/// return the full [`SimResult`] (metrics, tracked latencies, and — when
+/// telemetry collection is on — the merged `obs` series). Single runs are
+/// function-sharded across the machine's cores (bit-identical to
+/// sequential; `LACE_SIM_SHARDS=1` forces sequential).
+pub fn evaluate_result(
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    policy: &mut dyn KeepAlivePolicy,
+    lambda_carbon: f64,
+    oracle_gap: bool,
+) -> SimResult {
+    let cfg = SimConfig {
+        lambda_carbon,
+        provide_oracle_gap: oracle_gap,
+        ..SimConfig::default()
+    };
+    ShardedSimulator::new(trace, ci, energy.clone(), cfg).run(policy)
+}
+
+/// [`evaluate_result`] reduced to its metrics (the common case).
 pub fn evaluate(
     trace: &Trace,
     ci: &CarbonTrace,
@@ -74,14 +93,7 @@ pub fn evaluate(
     lambda_carbon: f64,
     oracle_gap: bool,
 ) -> SimMetrics {
-    let cfg = SimConfig {
-        lambda_carbon,
-        provide_oracle_gap: oracle_gap,
-        ..SimConfig::default()
-    };
-    let sim = ShardedSimulator::new(trace, ci, energy.clone(), cfg);
-    let SimResult { metrics, .. } = sim.run(policy);
-    metrics
+    evaluate_result(trace, ci, energy, policy, lambda_carbon, oracle_gap).metrics
 }
 
 /// Load the trained Q-network weights (or init weights when untrained)

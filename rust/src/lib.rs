@@ -13,8 +13,8 @@
 //!   a threaded online coordinator, and the experiment harness regenerating
 //!   every figure and table of the paper.
 //!
-//! Python never executes on the decision path: after `make artifacts` the
-//! binary is self-contained.
+//! Python never executes on the decision path: after the AOT step
+//! (`python/compile/aot.py`) the binary is self-contained.
 //!
 //! ## Crate map
 //!
@@ -33,12 +33,14 @@
 //! | [`coordinator`] | threaded online control plane: workload driver → router → pod lifecycle |
 //! | [`experiments`] | one harness per paper figure/table |
 //! | [`metrics`] | composite metrics (LCP, IRI) and report formatting |
+//! | [`obs`] | structured telemetry: counters, histograms, spans, JSONL export (no-op until a sink is installed) |
 
 pub mod carbon;
 pub mod coordinator;
 pub mod energy;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod rl;
 pub mod runtime;

@@ -22,6 +22,10 @@ use lace_rl::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    if args.flag("obs") {
+        let sink = lace_rl::obs::install_jsonl(experiments::results_dir().join("obs"));
+        eprintln!("[obs] telemetry enabled -> {}", sink.dir().display());
+    }
     let result = match args.subcommand.as_deref() {
         Some("gen-trace") => cmd_gen_trace(&args),
         Some("train") => cmd_train(&args),
@@ -59,7 +63,9 @@ fn print_usage() {
            --quick           shrunk workload for smoke runs\n\
            --policy NAME     lace-rl|huawei|latency-min|carbon-min|dpso|oracle\n\
            --lambda X        carbon trade-off weight in [0,1] (default 0.5)\n\
-           --artifacts DIR   artifact directory (default ./artifacts)"
+           --artifacts DIR   artifact directory (default ./artifacts)\n\
+           --obs             stream structured telemetry to results/obs/ as JSONL\n\
+                             (pass it last: it is a bare flag, not --key value)"
     );
 }
 
@@ -114,6 +120,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         t0.elapsed().as_secs_f64(),
         t0.elapsed().as_secs_f64() / report.episodes.len().max(1) as f64
     );
+    print_obs_summary();
     Ok(())
 }
 
@@ -140,9 +147,31 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let lambda = args.f64_or("lambda", 0.5);
     let trace = if args.flag("long-tailed") { &w.long_tailed } else { &w.general };
     let mut policy = build_policy(name)?;
-    let m = workload::evaluate(trace, &w.ci, &w.energy, policy.as_mut(), lambda, name == "oracle");
-    println!("{}", m.summary_row(name));
+    let r = workload::evaluate_result(
+        trace,
+        &w.ci,
+        &w.energy,
+        policy.as_mut(),
+        lambda,
+        name == "oracle",
+    );
+    println!("{}", r.metrics.summary_row(name));
+    if let Some(obs) = &r.obs {
+        lace_rl::obs::emit_sim(&format!("simulate_{name}"), obs);
+    }
+    print_obs_summary();
     Ok(())
+}
+
+/// Print the sink's cumulative summary table, if telemetry is on and
+/// anything was recorded (experiments print their own via the harness).
+fn print_obs_summary() {
+    if let Some(sink) = lace_rl::obs::sink() {
+        let summary = sink.summary();
+        if !summary.is_empty() {
+            print!("\n{summary}");
+        }
+    }
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -184,6 +213,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown policy '{other}' for serve"),
     };
     report.print(name);
+    print_obs_summary();
     Ok(())
 }
 

@@ -1,31 +1,56 @@
-//! Cross-policy comparison tables and normalized trade-off coordinates
-//! (Figs. 5–9 output formatting).
+//! Composite metrics and cross-policy report formatting (Figs. 5–9).
+//!
+//! The paper folds the two axes of the trade-off into two composite
+//! scores (§IV-A6), both computed here via [`SimMetrics`]:
+//!
+//! * **LCP** (Latency–Carbon Product) — `avg_e2e_latency_s ×
+//!   total_carbon_g`, where total carbon is the sum of execution,
+//!   keep-alive (idle), and cold-start energy carbon (§II-B, Eqs. 1–4).
+//!   Lower is better; a policy only wins LCP by being good on *both*
+//!   axes at once.
+//! * **IRI** (Inefficiency–Responsiveness Index) — `cold_starts ×
+//!   keepalive_carbon_g`: the product of the responsiveness failure
+//!   count and the idle-energy waste it was supposed to buy down.
+//!   A latency-min policy drives the first factor to its floor but pays
+//!   in the second; carbon-min the reverse — IRI punishes both corners.
+//!
+//! This module formats those numbers: per-workload comparison tables
+//! (Figs. 5/8), normalized trade-off coordinates (Figs. 6/9), and the
+//! best-composite picks (Figs. 7/9 claims).
+#![deny(missing_docs)]
 
 use crate::simulator::metrics::SimMetrics;
 
 /// One policy's results in a comparison.
 #[derive(Debug, Clone)]
 pub struct PolicyResult {
+    /// Policy label as shown in tables (e.g. `lace-rl`, `huawei-60s`).
     pub name: String,
+    /// The simulator's aggregate metrics for this policy.
     pub metrics: SimMetrics,
 }
 
 /// A multi-policy comparison over one workload.
 #[derive(Debug, Clone, Default)]
 pub struct Comparison {
+    /// Workload label (e.g. `general`, `long-tailed`).
     pub workload: String,
+    /// Per-policy rows in insertion order.
     pub results: Vec<PolicyResult>,
 }
 
 impl Comparison {
+    /// An empty comparison for the named workload.
     pub fn new(workload: &str) -> Self {
         Comparison { workload: workload.to_string(), results: Vec::new() }
     }
 
+    /// Append one policy's metrics row.
     pub fn add(&mut self, name: &str, metrics: SimMetrics) {
         self.results.push(PolicyResult { name: name.to_string(), metrics });
     }
 
+    /// Look up a row by policy name.
     pub fn get(&self, name: &str) -> Option<&PolicyResult> {
         self.results.iter().find(|r| r.name == name)
     }
@@ -83,7 +108,7 @@ impl Comparison {
         out
     }
 
-    /// Best (lowest) LCP and IRI policy names (Figs. 7/9 claims).
+    /// Name of the policy with the lowest LCP (Figs. 7/9 claims).
     pub fn best_lcp(&self) -> Option<&str> {
         self.results
             .iter()
@@ -91,6 +116,7 @@ impl Comparison {
             .map(|r| r.name.as_str())
     }
 
+    /// Name of the policy with the lowest IRI.
     pub fn best_iri(&self) -> Option<&str> {
         self.results
             .iter()

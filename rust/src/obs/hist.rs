@@ -1,0 +1,198 @@
+//! Log-scale value histogram for nonnegative telemetry values.
+
+use crate::util::json::Json;
+
+/// Number of bins: bin 0 holds `[0, 2·LO)`, bin i holds
+/// `[LO·2^i, LO·2^(i+1))`, the last bin absorbs everything above.
+const BINS: usize = 44;
+
+/// Lower resolution bound: values at or below this land in bin 0.
+const LO: f64 = 1e-4;
+
+/// A fixed-footprint log₂-scale histogram of nonnegative values
+/// (seconds, grams): 44 bins from 10⁻⁴ doubling per bin (top bin ≈ 8.8×10⁸),
+/// plus running count/sum/min/max. Merging is commutative on the bin
+/// counts and exact on the counters; `sum` merges by addition, so folding
+/// order follows the caller's contract (ascending function-id order for
+/// shard invariance, see [`super::SimObs`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    /// Number of recorded values.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: f64,
+    min: f64,
+    max: f64,
+    counts: [u64; BINS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            counts: [0; BINS],
+        }
+    }
+
+    fn bin(x: f64) -> usize {
+        if x <= LO {
+            // Also catches NaN and negatives (never expected; bin 0 keeps
+            // the invariant that every recorded value lands somewhere).
+            return 0;
+        }
+        // x > LO, so the log is positive and `as usize` floors it.
+        (((x / LO).log2()) as usize).min(BINS - 1)
+    }
+
+    /// `[lo, hi)` value bounds of bin `i`.
+    fn bounds(i: usize) -> (f64, f64) {
+        let lo = if i == 0 { 0.0 } else { LO * (1u64 << i) as f64 };
+        (lo, LO * (1u64 << (i + 1)) as f64)
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        self.counts[Self::bin(x)] += 1;
+    }
+
+    /// Fold `other` into `self` (bin counts add; min/max widen).
+    pub fn merge(&mut self, other: &Hist) {
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// JSONL `hist` line: summary stats plus the non-empty bins as
+    /// `[bin_lo, bin_hi, count]` triples.
+    pub fn to_json(&self, name: &str) -> Json {
+        let mut bins = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                let (lo, hi) = Self::bounds(i);
+                bins.push(Json::Arr(vec![Json::Num(lo), Json::Num(hi), Json::from(c)]));
+            }
+        }
+        Json::obj(vec![
+            ("kind", "hist".into()),
+            ("name", name.into()),
+            ("count", self.count.into()),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(self.min())),
+            ("max", Json::Num(self.max())),
+            ("mean", Json::Num(self.mean())),
+            ("bins", Json::Arr(bins)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_partition_the_positive_axis() {
+        // Every bin's lower bound maps back into that bin; a value just
+        // below the upper bound stays in it.
+        for i in 1..BINS - 1 {
+            let (lo, hi) = Hist::bounds(i);
+            assert_eq!(Hist::bin(lo), i, "lower bound of bin {i}");
+            assert_eq!(Hist::bin(hi * (1.0 - 1e-12)), i, "upper edge of bin {i}");
+        }
+        assert_eq!(Hist::bin(0.0), 0);
+        assert_eq!(Hist::bin(LO), 0);
+        assert_eq!(Hist::bin(f64::MAX), BINS - 1);
+    }
+
+    #[test]
+    fn record_and_stats() {
+        let mut h = Hist::new();
+        for x in [0.001, 0.002, 0.004, 1.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 1.007).abs() < 1e-12);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 1.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential_record() {
+        let xs = [0.0003, 0.01, 0.5, 7.0, 120.0];
+        let mut whole = Hist::new();
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i < 2 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn empty_hist_serializes_finite_stats() {
+        let h = Hist::new();
+        let line = h.to_json("empty").to_string();
+        // min/max must not leak ±inf into the JSON output.
+        assert!(!line.contains("inf"), "{line}");
+        assert!(Json::parse(&line).is_ok(), "{line}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Structured observability: counters, value histograms, span timers, and
+//! JSONL export for simulator, trainer, and coordinator runs.
+//!
+//! The paper's headline numbers (cold-start and idle-carbon reductions vs.
+//! the static 60 s baseline) are aggregates; debugging a reproduction needs
+//! to see *where* cold starts and idle carbon accrue — per function, per
+//! policy, over time. This module provides that visibility without touching
+//! the ≥1M inv/s hot path (DESIGN.md §8):
+//!
+//! * **Disabled by default.** Recording sites are guarded by a relaxed
+//!   atomic load ([`enabled`]) or an `Option` check; until a sink is
+//!   installed they compile down to a branch over a constant-false flag.
+//!   The property test `rust/tests/property_obs.rs` asserts collection is
+//!   observation-only: simulation results stay bit-identical either way.
+//! * **Shard-count-invariant.** Simulation telemetry is accumulated
+//!   per function ([`FuncObs`]) and folded in ascending function-id order
+//!   ([`SimObs::totals`]), the same merge contract the sharded simulator
+//!   uses for metrics — so a sharded run emits byte-identical telemetry to
+//!   a sequential one.
+//! * **JSONL streams.** When a sink is installed ([`install_jsonl`]),
+//!   each run's events land under `results/obs/<stream>.jsonl` (one JSON
+//!   object per line, schema documented in EXPERIMENTS.md §Observability)
+//!   and a summary table prints after each experiment.
+//!
+//! Enable from the CLI with a trailing `--obs` flag, e.g.
+//! `lace-rl experiment fig5 --obs`.
+
+#![deny(missing_docs)]
+
+mod hist;
+mod sim;
+mod sink;
+
+pub use hist::Hist;
+pub use sim::{emit_sim, FuncObs, ShardObs, SimObs, BUCKET_S};
+pub use sink::ObsSink;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: OnceLock<ObsSink> = OnceLock::new();
+
+/// Whether a global sink is installed and telemetry collection is on.
+/// A relaxed atomic load: cheap enough for per-run (not per-invocation)
+/// guards on the simulation path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install the process-wide JSONL sink writing under `dir` and turn
+/// collection on. Idempotent: the first call wins; later calls (even with
+/// a different directory) return the already-installed sink. There is no
+/// uninstall — the sink lives for the process, matching the one-shot CLI
+/// lifecycle.
+pub fn install_jsonl(dir: impl Into<PathBuf>) -> &'static ObsSink {
+    let dir = dir.into();
+    let sink = SINK.get_or_init(|| ObsSink::new(dir));
+    ENABLED.store(true, Ordering::Release);
+    sink
+}
+
+/// The installed sink, if any. `None` until [`install_jsonl`] runs.
+pub fn sink() -> Option<&'static ObsSink> {
+    if enabled() {
+        SINK.get()
+    } else {
+        None
+    }
+}
+
+/// A scoped wall-clock timer: records its elapsed time into the sink's
+/// span registry on drop. Obtain via [`span`]; hold it for the duration of
+/// the phase being measured.
+pub struct Span {
+    name: &'static str,
+    t0: Instant,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(sink) = sink() {
+            sink.record_span_s(self.name, self.t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// Start a scoped span timer named `name` (e.g. `"trainer/rollout"`).
+/// Returns `None` — and therefore costs one atomic load — when no sink is
+/// installed. Spans are for coarse phases (an episode's rollout, a serving
+/// run), never the per-invocation hot loop.
+pub fn span(name: &'static str) -> Option<Span> {
+    if enabled() {
+        Some(Span { name, t0: Instant::now() })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_in_tests() {
+        // Nothing in the test suite installs the global sink; spans and
+        // sink lookups must be no-ops.
+        if !enabled() {
+            assert!(sink().is_none());
+            assert!(span("test/never").is_none());
+        }
+    }
+}

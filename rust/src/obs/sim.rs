@@ -1,0 +1,362 @@
+//! Simulation telemetry: per-function accumulators, shard partials, and
+//! the id-order fold that keeps merged output shard-count-invariant.
+
+use super::hist::Hist;
+use crate::util::json::Json;
+
+/// Width (seconds) of the time buckets behind the cold-start / idle-carbon
+/// series (5 min — 288 buckets over the paper's 1-day trace).
+pub const BUCKET_S: f64 = 300.0;
+
+/// One time bucket of a per-function series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct BucketCell {
+    /// Bucket index (`t / BUCKET_S`).
+    bucket: u32,
+    cold_starts: u64,
+    idle_carbon_g: f64,
+}
+
+impl BucketCell {
+    fn new(bucket: u32) -> Self {
+        BucketCell { bucket, cold_starts: 0, idle_carbon_g: 0.0 }
+    }
+}
+
+fn bucket_of(t: f64) -> u32 {
+    if t.is_finite() && t > 0.0 {
+        (t / BUCKET_S) as u32
+    } else {
+        0
+    }
+}
+
+/// Telemetry of a single function, accumulated event-by-event during a
+/// replay pass in the same order the engine updates its `SimMetrics`
+/// partial — which is what makes the id-order fold of [`SimObs::totals`]
+/// bitwise-equal to the run's metrics (see `rust/tests/property_obs.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuncObs {
+    /// Invocations served cold.
+    pub cold_starts: u64,
+    /// Invocations served from a warm pod.
+    pub warm_starts: u64,
+    /// Pods whose keep-alive window lapsed unused.
+    pub expiries: u64,
+    /// Total cold-start latency (s).
+    pub cold_latency_s: f64,
+    /// Idle (keep-alive) carbon (g) over all idle spans: reuse, expiry,
+    /// and end-of-trace flush. Totals match `SimMetrics::keepalive_carbon_g`.
+    pub idle_carbon_g: f64,
+    /// The wasted subset of [`FuncObs::idle_carbon_g`]: carbon of windows
+    /// that expired without a reuse.
+    pub expiry_carbon_g: f64,
+    /// Keep-alive durations chosen by the policy (s).
+    pub keep_hist: Hist,
+    /// Cold-start latencies (s).
+    pub cold_hist: Hist,
+    /// Idle carbon per expiry (g).
+    pub expiry_hist: Hist,
+    /// Time-bucketed series, sorted by bucket index.
+    buckets: Vec<BucketCell>,
+}
+
+impl FuncObs {
+    pub(crate) fn new() -> Self {
+        FuncObs {
+            cold_starts: 0,
+            warm_starts: 0,
+            expiries: 0,
+            cold_latency_s: 0.0,
+            idle_carbon_g: 0.0,
+            expiry_carbon_g: 0.0,
+            keep_hist: Hist::new(),
+            cold_hist: Hist::new(),
+            expiry_hist: Hist::new(),
+            buckets: Vec::new(),
+        }
+    }
+
+    /// The cell for time `t`, inserted in sorted position if absent.
+    /// Events arrive nearly in time order (expiry timestamps can trail the
+    /// arrival clock), so the scan from the tail is almost always one
+    /// comparison.
+    fn cell(&mut self, t: f64) -> &mut BucketCell {
+        let b = bucket_of(t);
+        match self.buckets.iter().rposition(|c| c.bucket <= b) {
+            Some(i) if self.buckets[i].bucket == b => &mut self.buckets[i],
+            Some(i) => {
+                self.buckets.insert(i + 1, BucketCell::new(b));
+                &mut self.buckets[i + 1]
+            }
+            None => {
+                self.buckets.insert(0, BucketCell::new(b));
+                &mut self.buckets[0]
+            }
+        }
+    }
+
+    pub(crate) fn on_expiry(&mut self, t: f64, carbon_g: f64) {
+        self.expiries += 1;
+        self.idle_carbon_g += carbon_g;
+        self.expiry_carbon_g += carbon_g;
+        self.expiry_hist.record(carbon_g);
+        self.cell(t).idle_carbon_g += carbon_g;
+    }
+
+    pub(crate) fn on_warm(&mut self, t: f64, idle_carbon_g: f64) {
+        self.warm_starts += 1;
+        self.idle_carbon_g += idle_carbon_g;
+        self.cell(t).idle_carbon_g += idle_carbon_g;
+    }
+
+    pub(crate) fn on_cold(&mut self, t: f64, cold_lat_s: f64) {
+        self.cold_starts += 1;
+        self.cold_latency_s += cold_lat_s;
+        self.cold_hist.record(cold_lat_s);
+        self.cell(t).cold_starts += 1;
+    }
+
+    pub(crate) fn on_decision(&mut self, keep_s: f64) {
+        self.keep_hist.record(keep_s);
+    }
+
+    pub(crate) fn on_flush(&mut self, horizon: f64, idle_carbon_g: f64) {
+        self.idle_carbon_g += idle_carbon_g;
+        self.cell(horizon).idle_carbon_g += idle_carbon_g;
+    }
+
+    /// Fold `other` into `self`. Scalars and histograms add; the bucket
+    /// series merge by bucket index (both inputs are sorted).
+    fn merge(&mut self, other: &FuncObs) {
+        self.cold_starts += other.cold_starts;
+        self.warm_starts += other.warm_starts;
+        self.expiries += other.expiries;
+        self.cold_latency_s += other.cold_latency_s;
+        self.idle_carbon_g += other.idle_carbon_g;
+        self.expiry_carbon_g += other.expiry_carbon_g;
+        self.keep_hist.merge(&other.keep_hist);
+        self.cold_hist.merge(&other.cold_hist);
+        self.expiry_hist.merge(&other.expiry_hist);
+        let mut merged = Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.buckets.len() && j < other.buckets.len() {
+            let (a, b) = (self.buckets[i], other.buckets[j]);
+            if a.bucket < b.bucket {
+                merged.push(a);
+                i += 1;
+            } else if b.bucket < a.bucket {
+                merged.push(b);
+                j += 1;
+            } else {
+                merged.push(BucketCell {
+                    bucket: a.bucket,
+                    cold_starts: a.cold_starts + b.cold_starts,
+                    idle_carbon_g: a.idle_carbon_g + b.idle_carbon_g,
+                });
+                i += 1;
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&self.buckets[i..]);
+        merged.extend_from_slice(&other.buckets[j..]);
+        self.buckets = merged;
+    }
+
+    /// The time series as `(bucket start s, cold starts, idle carbon g)`
+    /// rows in ascending time order (empty buckets omitted).
+    pub fn bucket_series(&self) -> Vec<(f64, u64, f64)> {
+        self.buckets
+            .iter()
+            .map(|c| (c.bucket as f64 * BUCKET_S, c.cold_starts, c.idle_carbon_g))
+            .collect()
+    }
+}
+
+/// Telemetry of one contiguous function-id shard during a replay pass.
+/// Created by the engine when collection is on; collected into a
+/// [`SimObs`] after the pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardObs {
+    f_lo: usize,
+    funcs: Vec<FuncObs>,
+}
+
+impl ShardObs {
+    pub(crate) fn new(f_lo: usize, n: usize) -> Self {
+        ShardObs { f_lo, funcs: (0..n).map(|_| FuncObs::new()).collect() }
+    }
+
+    /// The accumulator for global function id `f`.
+    #[inline]
+    pub(crate) fn func(&mut self, f: usize) -> &mut FuncObs {
+        &mut self.funcs[f - self.f_lo]
+    }
+}
+
+/// One run's merged telemetry: per-function rows plus all-function totals.
+///
+/// Shards absorb in ascending shard (= function-id) order and the totals
+/// fold per-function partials in that same order — the metrics merge
+/// contract (`simulator::sharded`) — so a sharded run's `SimObs` is equal,
+/// f64 bits included, to a sequential run's.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimObs {
+    /// Width (s) of the series buckets ([`BUCKET_S`]).
+    pub bucket_s: f64,
+    /// `(function id, telemetry)` rows in ascending id order.
+    pub funcs: Vec<(u32, FuncObs)>,
+    /// All-function totals, folded in ascending function-id order.
+    pub totals: FuncObs,
+}
+
+impl SimObs {
+    pub(crate) fn new() -> Self {
+        SimObs { bucket_s: BUCKET_S, funcs: Vec::new(), totals: FuncObs::new() }
+    }
+
+    /// Fold one shard's partials in. Must be called in ascending shard
+    /// order; each function id appears in exactly one shard.
+    pub(crate) fn absorb(&mut self, shard: ShardObs) {
+        let ShardObs { f_lo, funcs } = shard;
+        self.funcs.reserve(funcs.len());
+        for (i, fo) in funcs.into_iter().enumerate() {
+            self.totals.merge(&fo);
+            self.funcs.push(((f_lo + i) as u32, fo));
+        }
+    }
+
+    /// The JSONL lines for this run (schema in EXPERIMENTS.md
+    /// §Observability): a `meta` header, a `totals` line, one `func` line
+    /// per function (with its inline `[t, cold_starts, idle_carbon_g]`
+    /// series), the run-level `bucket` series, and the three totals
+    /// histograms.
+    pub fn jsonl_lines(&self, label: &str) -> Vec<Json> {
+        let t = &self.totals;
+        let mut lines = Vec::with_capacity(self.funcs.len() + t.buckets.len() + 6);
+        lines.push(Json::obj(vec![
+            ("kind", "meta".into()),
+            ("schema", 1u64.into()),
+            ("stream", label.into()),
+            ("bucket_s", Json::Num(self.bucket_s)),
+            ("functions", (self.funcs.len() as u64).into()),
+        ]));
+        lines.push(Json::obj(vec![
+            ("kind", "totals".into()),
+            ("cold_starts", t.cold_starts.into()),
+            ("warm_starts", t.warm_starts.into()),
+            ("expiries", t.expiries.into()),
+            ("cold_latency_s", Json::Num(t.cold_latency_s)),
+            ("idle_carbon_g", Json::Num(t.idle_carbon_g)),
+            ("expiry_carbon_g", Json::Num(t.expiry_carbon_g)),
+        ]));
+        for (id, fo) in &self.funcs {
+            let series = fo
+                .bucket_series()
+                .into_iter()
+                .map(|(t0, cold, carbon)| {
+                    Json::Arr(vec![Json::Num(t0), Json::from(cold), Json::Num(carbon)])
+                })
+                .collect();
+            lines.push(Json::obj(vec![
+                ("kind", "func".into()),
+                ("id", (*id as u64).into()),
+                ("cold_starts", fo.cold_starts.into()),
+                ("warm_starts", fo.warm_starts.into()),
+                ("expiries", fo.expiries.into()),
+                ("cold_latency_s", Json::Num(fo.cold_latency_s)),
+                ("idle_carbon_g", Json::Num(fo.idle_carbon_g)),
+                ("expiry_carbon_g", Json::Num(fo.expiry_carbon_g)),
+                ("series", Json::Arr(series)),
+            ]));
+        }
+        for (t0, cold, carbon) in t.bucket_series() {
+            lines.push(Json::obj(vec![
+                ("kind", "bucket".into()),
+                ("t", Json::Num(t0)),
+                ("cold_starts", cold.into()),
+                ("idle_carbon_g", Json::Num(carbon)),
+            ]));
+        }
+        lines.push(t.keep_hist.to_json("keepalive_s"));
+        lines.push(t.cold_hist.to_json("cold_start_s"));
+        lines.push(t.expiry_hist.to_json("idle_carbon_per_expiry_g"));
+        lines
+    }
+}
+
+/// Emit one simulation's telemetry as `<stream>.jsonl` through the
+/// installed sink; a silent no-op when no sink is installed, a warning
+/// (never an error) when the write fails — telemetry must not take an
+/// experiment down.
+pub fn emit_sim(stream: &str, obs: &SimObs) {
+    if let Some(sink) = super::sink() {
+        if let Err(e) = sink.emit_jsonl(stream, &obs.jsonl_lines(stream)) {
+            eprintln!("[obs] failed to write stream '{stream}': {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_order_bucket_inserts_stay_sorted() {
+        let mut fo = FuncObs::new();
+        fo.on_cold(10.0, 1.0); // bucket 0
+        fo.on_cold(950.0, 1.0); // bucket 3
+        fo.on_expiry(400.0, 0.5); // bucket 1, behind the clock
+        fo.on_warm(950.0, 0.25); // bucket 3 again
+        let s = fo.bucket_series();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], (0.0, 1, 0.0));
+        assert_eq!(s[1], (300.0, 0, 0.5));
+        assert_eq!(s[2], (900.0, 1, 0.25));
+    }
+
+    #[test]
+    fn absorb_in_id_order_matches_single_shard() {
+        // The same events recorded through one shard of 4 functions vs two
+        // shards of 2 must produce identical SimObs.
+        let mut single = ShardObs::new(0, 4);
+        single.func(0).on_cold(5.0, 2.0);
+        single.func(2).on_warm(100.0, 0.125);
+        single.func(3).on_decision(60.0);
+        let mut whole = SimObs::new();
+        whole.absorb(single);
+
+        let mut lo = ShardObs::new(0, 2);
+        lo.func(0).on_cold(5.0, 2.0);
+        let mut hi = ShardObs::new(2, 2);
+        hi.func(2).on_warm(100.0, 0.125);
+        hi.func(3).on_decision(60.0);
+        let mut split = SimObs::new();
+        split.absorb(lo);
+        split.absorb(hi);
+
+        assert_eq!(whole, split);
+        assert_eq!(whole.totals.cold_starts, 1);
+        assert_eq!(whole.totals.warm_starts, 1);
+        assert_eq!(whole.totals.keep_hist.count, 1);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_cover_all_kinds() {
+        let mut shard = ShardObs::new(0, 2);
+        shard.func(0).on_cold(5.0, 1.5);
+        shard.func(0).on_decision(10.0);
+        shard.func(1).on_warm(400.0, 0.01);
+        let mut obs = SimObs::new();
+        obs.absorb(shard);
+        let lines = obs.jsonl_lines("test");
+        let mut kinds = Vec::new();
+        for l in &lines {
+            let parsed = Json::parse(&l.to_string()).unwrap();
+            kinds.push(parsed.get("kind").unwrap().as_str().unwrap().to_string());
+        }
+        for want in ["meta", "totals", "func", "bucket", "hist"] {
+            assert!(kinds.iter().any(|k| k == want), "missing kind {want}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! The JSONL telemetry sink: counters, span registry, stream files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::json::Json;
+use crate::util::stats::Running;
+
+/// Recover from lock poisoning: telemetry must never take the process
+/// down, and a panicking recorder leaves the registries merely incomplete.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Process-wide telemetry sink (install via [`super::install_jsonl`]).
+///
+/// Holds three registries, each behind its own mutex — recording happens
+/// on run boundaries (a stream per simulation, a span per phase), never
+/// inside the per-invocation loop, so contention is irrelevant:
+///
+/// * monotonic **counters**, keyed by name (`serve/requests`, …);
+/// * **span** wall-clock stats, keyed by span name ([`super::span`]);
+/// * the list of **stream** files written so far ([`ObsSink::emit_jsonl`]).
+///
+/// Counters and spans are cumulative for the process lifetime — an
+/// `experiment all` run prints a growing summary after each experiment.
+pub struct ObsSink {
+    dir: PathBuf,
+    counters: Mutex<BTreeMap<String, u64>>,
+    spans: Mutex<BTreeMap<&'static str, Running>>,
+    streams: Mutex<Vec<PathBuf>>,
+}
+
+impl ObsSink {
+    pub(crate) fn new(dir: PathBuf) -> Self {
+        ObsSink {
+            dir,
+            counters: Mutex::new(BTreeMap::new()),
+            spans: Mutex::new(BTreeMap::new()),
+            streams: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Directory the JSONL streams are written under (e.g. `results/obs`).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Add `delta` to the named monotonic counter (created at 0).
+    pub fn add_counter(&self, name: &str, delta: u64) {
+        *lock(&self.counters).entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Current value of a counter (0 if never touched). Mostly for tests.
+    pub fn counter(&self, name: &str) -> u64 {
+        lock(&self.counters).get(name).copied().unwrap_or(0)
+    }
+
+    /// Record one span duration; called by [`super::Span`] on drop.
+    pub fn record_span_s(&self, name: &'static str, seconds: f64) {
+        lock(&self.spans).entry(name).or_insert_with(Running::new).add(seconds);
+    }
+
+    /// Write `lines` as `<dir>/<stream>.jsonl` (one JSON object per line,
+    /// directory created on demand, non-filename characters in `stream`
+    /// replaced by `_`). A rerun of the same stream overwrites the file —
+    /// each stream is one run's snapshot, not an append log. Returns the
+    /// path written.
+    pub fn emit_jsonl(&self, stream: &str, lines: &[Json]) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join(format!("{}.jsonl", sanitize(stream)));
+        let mut out = String::new();
+        for line in lines {
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        let mut streams = lock(&self.streams);
+        if !streams.contains(&path) {
+            streams.push(path.clone());
+        }
+        Ok(path)
+    }
+
+    /// Human-readable summary table: counters, span stats, and the stream
+    /// files written so far. Empty string when nothing was recorded (so
+    /// callers can `print!` unconditionally).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let counters = lock(&self.counters);
+        let spans = lock(&self.spans);
+        let streams = lock(&self.streams);
+        if counters.is_empty() && spans.is_empty() && streams.is_empty() {
+            return String::new();
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "-- obs summary ({}) --", self.dir.display());
+        for (name, v) in counters.iter() {
+            let _ = writeln!(out, "  counter {name:<32} {v}");
+        }
+        for (name, r) in spans.iter() {
+            let _ = writeln!(
+                out,
+                "  span    {name:<32} n={} total={:.3}s mean={:.3}s max={:.3}s",
+                r.count,
+                r.sum,
+                r.mean(),
+                r.max
+            );
+        }
+        for path in streams.iter() {
+            let _ = writeln!(out, "  stream  {}", path.display());
+        }
+        out
+    }
+}
+
+/// Keep stream names filesystem-safe without pulling in a path library.
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let sink = ObsSink::new(PathBuf::from("results/obs-test"));
+        sink.add_counter("a/b", 2);
+        sink.add_counter("a/b", 3);
+        assert_eq!(sink.counter("a/b"), 5);
+        assert_eq!(sink.counter("missing"), 0);
+        assert!(sink.summary().contains("a/b"));
+    }
+
+    #[test]
+    fn spans_aggregate() {
+        let sink = ObsSink::new(PathBuf::from("results/obs-test"));
+        sink.record_span_s("phase/x", 0.5);
+        sink.record_span_s("phase/x", 1.5);
+        let s = sink.summary();
+        assert!(s.contains("phase/x"), "{s}");
+        assert!(s.contains("n=2"), "{s}");
+    }
+
+    #[test]
+    fn sanitize_keeps_safe_chars() {
+        assert_eq!(sanitize("general_lace-rl.v1"), "general_lace-rl.v1");
+        assert_eq!(sanitize("a/b c"), "a_b_c");
+    }
+
+    #[test]
+    fn emit_writes_one_object_per_line() {
+        let dir = std::env::temp_dir().join(format!("lace-obs-{}", std::process::id()));
+        let sink = ObsSink::new(dir.clone());
+        let lines = vec![
+            Json::obj(vec![("kind", "meta".into()), ("schema", 1u64.into())]),
+            Json::obj(vec![("kind", "x".into()), ("v", Json::Num(1.5))]),
+        ];
+        let path = sink.emit_jsonl("stream a", &lines).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "stream_a.jsonl");
+        let body = std::fs::read_to_string(&path).unwrap();
+        let parsed: Vec<Json> =
+            body.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].get("schema").and_then(Json::as_f64), Some(1.0));
+        // Emitting the same stream twice registers it once.
+        sink.emit_jsonl("stream a", &lines).unwrap();
+        assert_eq!(sink.summary().matches("stream_a.jsonl").count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -152,7 +152,9 @@ pub fn train(
         agent.set_mlp(NativeMlp::from_arc(Arc::clone(&params)));
         let sim_cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
         let sim = ShardedSimulator::new(trace, ci, energy.clone(), sim_cfg);
+        let roll_span = crate::obs::span("trainer/rollout");
         sim.run(&mut agent);
+        drop(roll_span);
         let episode_reward = agent.episode_reward;
         let transitions = agent.take_transitions();
         let n_tr = transitions.len();
@@ -164,6 +166,7 @@ pub fn train(
         let mut loss_sum = 0.0f32;
         let mut loss_n = 0u32;
         if replay.len() >= b {
+            let _grad_span = crate::obs::span("trainer/gradient-steps");
             for _ in 0..cfg.steps_per_episode {
                 replay.sample_into(
                     &mut rng, b, &mut s_buf, &mut a_buf, &mut r_buf, &mut ns_buf,
@@ -216,6 +219,37 @@ pub fn train(
         }
         episodes.push(stats);
         epsilon = (epsilon * cfg.epsilon_decay).max(cfg.epsilon_min);
+    }
+
+    // --- Telemetry: per-episode loss/ε/λ/reward series (no-op when no
+    // obs sink is installed).
+    if let Some(sink) = crate::obs::sink() {
+        use crate::util::json::Json;
+        sink.add_counter("train/episodes", episodes.len() as u64);
+        sink.add_counter("train/gradient_steps", t_step);
+        let mut lines = Vec::with_capacity(episodes.len() + 1);
+        lines.push(Json::obj(vec![
+            ("kind", "meta".into()),
+            ("stream", "train".into()),
+            ("episodes", (episodes.len() as u64).into()),
+            ("gradient_steps", t_step.into()),
+        ]));
+        for s in &episodes {
+            lines.push(Json::obj(vec![
+                ("kind", "episode".into()),
+                ("episode", (s.episode as u64).into()),
+                ("epsilon", s.epsilon.into()),
+                ("lambda", s.lambda.into()),
+                ("transitions", (s.transitions as u64).into()),
+                // NaN when an episode ran no gradient steps (replay still
+                // filling) — export as null, not invalid bare NaN.
+                ("td_loss", Json::num_or_null(s.mean_loss as f64)),
+                ("reward", s.episode_reward.into()),
+            ]));
+        }
+        if let Err(e) = sink.emit_jsonl("train", &lines) {
+            eprintln!("[obs] failed to write train telemetry: {e}");
+        }
     }
 
     // Release the other Arc holders (agent's MLP, target snapshot) so the

@@ -32,10 +32,14 @@
 //! the fork contract on that trait). Both paths accumulate per-function
 //! partial [`SimMetrics`] and fold them in ascending function-id order, and
 //! both flush against the global `t_end` — which is why sharded results are
-//! bit-identical to sequential ones.
+//! bit-identical to sequential ones. Telemetry (`crate::obs`) rides the
+//! same contract: per-function accumulators recorded adjacent to each
+//! metrics update, folded in the same id order, so collected telemetry is
+//! shard-count-invariant too.
 
 use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
+use crate::obs::{ShardObs, SimObs};
 use crate::policy::{DecisionContext, KeepAlivePolicy, Outcome};
 use crate::simulator::metrics::SimMetrics;
 use crate::simulator::pod::{Pending, Pod};
@@ -56,6 +60,12 @@ pub struct SimConfig {
     pub track_latencies: bool,
     /// Populate the clairvoyant `next_arrival_gap` (Oracle runs only).
     pub provide_oracle_gap: bool,
+    /// Collect structured telemetry into [`SimResult::obs`] for this run
+    /// even without a global sink. Collection is also on — regardless of
+    /// this flag — whenever a process-wide sink is installed
+    /// (`obs::install_jsonl`); collecting changes no simulation output bit
+    /// (property-tested in `rust/tests/property_obs.rs`).
+    pub collect_obs: bool,
 }
 
 impl Default for SimConfig {
@@ -66,6 +76,7 @@ impl Default for SimConfig {
             reuse_window: DEFAULT_WINDOW,
             track_latencies: false,
             provide_oracle_gap: false,
+            collect_obs: false,
         }
     }
 }
@@ -76,6 +87,9 @@ pub struct SimResult {
     pub metrics: SimMetrics,
     /// Per-invocation E2E latencies when `track_latencies` is set.
     pub latencies: Vec<f64>,
+    /// Merged telemetry when collection is on (`SimConfig::collect_obs` or
+    /// an installed `obs` sink); `None` otherwise.
+    pub obs: Option<SimObs>,
 }
 
 /// The simulator: borrows a trace + CI trace + energy model, runs policies.
@@ -127,6 +141,9 @@ pub(crate) struct ShardPass<'a> {
     // Scratch buffer for just-expired decisions, reused across
     // invocations — the hot loop allocates nothing per arrival.
     expired: Vec<(Pending, f64, f64, f64)>, // (pending, warm_until, idle_carbon, span)
+    // Telemetry accumulators, `Some` only when collection is on; every
+    // recording site below is a null-check when off.
+    obs: Option<ShardObs>,
     /// Latest completion time seen by this pass.
     pub(crate) t_end: f64,
 }
@@ -140,6 +157,7 @@ impl<'a> ShardPass<'a> {
         funcs: std::ops::Range<usize>,
     ) -> ShardPass<'a> {
         let f_lo = funcs.start;
+        let n = funcs.len();
         let states = funcs
             .map(|_| FuncState {
                 pods: Vec::new(),
@@ -148,7 +166,22 @@ impl<'a> ShardPass<'a> {
                 metrics: SimMetrics::new(),
             })
             .collect();
-        ShardPass { trace, ci, energy, cfg, f_lo, funcs: states, expired: Vec::new(), t_end: 0.0 }
+        let obs = if cfg.collect_obs || crate::obs::enabled() {
+            Some(ShardObs::new(f_lo, n))
+        } else {
+            None
+        };
+        ShardPass {
+            trace,
+            ci,
+            energy,
+            cfg,
+            f_lo,
+            funcs: states,
+            expired: Vec::new(),
+            obs,
+            t_end: 0.0,
+        }
     }
 
     /// Replay one invocation; returns its end-to-end latency.
@@ -186,6 +219,12 @@ impl<'a> ShardPass<'a> {
                 st.metrics.keepalive_carbon_g += span_carbon;
                 st.metrics.idle_pod_seconds += span;
                 st.metrics.wasted_idle_seconds += span;
+                if let Some(o) = self.obs.as_mut() {
+                    // Bucketed at the expiry time (warm_until), which can
+                    // trail the arrival clock — the accumulator handles
+                    // out-of-order inserts.
+                    o.func(f).on_expiry(pod.warm_until, span_carbon);
+                }
                 if let Some(p) = pod.pending {
                     self.expired.push((p, pod.warm_until, span_carbon, span));
                 }
@@ -213,6 +252,9 @@ impl<'a> ShardPass<'a> {
                     / crate::energy::JOULES_PER_KWH;
                 st.metrics.keepalive_carbon_g += idle_carbon;
                 st.metrics.idle_pod_seconds += t - pod.idle_start;
+                if let Some(o) = self.obs.as_mut() {
+                    o.func(f).on_warm(t, idle_carbon);
+                }
                 if let Some(p) = pod.pending.take() {
                     policy.observe(&Outcome {
                         func: inv.func,
@@ -286,6 +328,9 @@ impl<'a> ShardPass<'a> {
         if is_cold {
             st.metrics.cold_starts += 1;
             st.metrics.cold_latency_s += cold_lat;
+            if let Some(o) = self.obs.as_mut() {
+                o.func(f).on_cold(t, cold_lat);
+            }
         } else {
             st.metrics.warm_starts += 1;
         }
@@ -315,6 +360,9 @@ impl<'a> ShardPass<'a> {
             let (a, k) = policy.decide_seconds(&ctx);
             (a.min(KEEP_ALIVE_ACTIONS.len() - 1), k)
         };
+        if let Some(o) = self.obs.as_mut() {
+            o.func(f).on_decision(keep_s);
+        }
         let pod = &mut st.pods[pod_idx];
         pod.busy_until = completion;
         pod.idle_start = completion;
@@ -348,6 +396,9 @@ impl<'a> ShardPass<'a> {
                     / crate::energy::JOULES_PER_KWH;
                 metrics.keepalive_carbon_g += idle_carbon;
                 metrics.idle_pod_seconds += horizon - pod.idle_start;
+                if let Some(o) = self.obs.as_mut() {
+                    o.func(f).on_flush(horizon, idle_carbon);
+                }
                 if let Some(p) = pod.pending {
                     policy.observe(&Outcome {
                         func: f as u32,
@@ -371,6 +422,13 @@ impl<'a> ShardPass<'a> {
         for st in &self.funcs {
             into.merge(&st.metrics);
         }
+    }
+
+    /// Take this pass's telemetry partials (if collection was on). The
+    /// caller folds shards into a [`SimObs`] in ascending shard order,
+    /// mirroring `collect`.
+    pub(crate) fn take_obs(&mut self) -> Option<ShardObs> {
+        self.obs.take()
     }
 }
 
@@ -410,7 +468,12 @@ impl<'a> Simulator<'a> {
         pass.flush(policy, t_end);
         let mut metrics = SimMetrics::new();
         pass.collect(&mut metrics);
-        SimResult { metrics, latencies }
+        let obs = pass.take_obs().map(|shard| {
+            let mut o = SimObs::new();
+            o.absorb(shard);
+            o
+        });
+        SimResult { metrics, latencies, obs }
     }
 }
 

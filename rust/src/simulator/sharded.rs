@@ -144,6 +144,7 @@ impl<'a> ShardedSimulator<'a> {
         // needs the global t_end, so it cannot run inside the shards.
         let t_end = results.iter().fold(0.0f64, |acc, (p, _, _)| acc.max(p.t_end));
         let mut metrics = SimMetrics::new();
+        let mut obs: Option<crate::obs::SimObs> = None;
         let mut latencies = if self.cfg.track_latencies {
             vec![0.0; trace.invocations.len()]
         } else {
@@ -152,6 +153,11 @@ impl<'a> ShardedSimulator<'a> {
         for (si, (pass, lats, fork)) in results.iter_mut().enumerate() {
             pass.flush(fork.as_mut(), t_end);
             pass.collect(&mut metrics);
+            // Telemetry folds in the same shard (= function-id) order as
+            // the metrics, so merged obs output is shard-count-invariant.
+            if let Some(shard) = pass.take_obs() {
+                obs.get_or_insert_with(crate::obs::SimObs::new).absorb(shard);
+            }
             if self.cfg.track_latencies {
                 for (&gi, &l) in index.invocations[si].iter().zip(lats.iter()) {
                     latencies[gi as usize] = l;
@@ -159,7 +165,7 @@ impl<'a> ShardedSimulator<'a> {
             }
             policy.absorb(fork.as_mut());
         }
-        SimResult { metrics, latencies }
+        SimResult { metrics, latencies, obs }
     }
 }
 

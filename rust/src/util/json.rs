@@ -75,6 +75,16 @@ impl Json {
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+
+    /// A number, or `null` when it is not finite — the writer prints
+    /// `Json::Num(f64::NAN)` as bare `NaN`, which no parser accepts.
+    pub fn num_or_null(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
 }
 
 impl From<f64> for Json {

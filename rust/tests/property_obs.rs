@@ -1,0 +1,212 @@
+//! Properties of the `obs` telemetry layer:
+//!
+//! 1. Collection is observation-only — turning it on changes no simulation
+//!    output bit (metrics and tracked latencies identical).
+//! 2. Merged telemetry is shard-count-invariant — a sharded run's `SimObs`
+//!    (and its JSONL rendering) equals the sequential run's, f64 bits
+//!    included, for every shard count.
+//! 3. The telemetry totals track the run's `SimMetrics` bitwise: the
+//!    accumulators are recorded adjacent to each metrics update and folded
+//!    under the same id-order contract, so the sums cannot drift.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::{BoxedPolicy, CarbonMin, FixedTimeout, LatencyMin};
+use lace_rl::prop_assert;
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::simulator::sharded::ShardedSimulator;
+use lace_rl::trace::model::Trace;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+fn small_trace(rng: &mut Rng) -> Trace {
+    let cfg = SynthConfig {
+        n_functions: 8 + rng.index(20),
+        duration_s: 600.0 + rng.f64() * 1200.0,
+        target_invocations: 2_000 + rng.index(3_000),
+        seed: rng.next_u64(),
+        ..SynthConfig::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+fn random_ci(rng: &mut Rng) -> CarbonTrace {
+    match rng.index(2) {
+        0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+        _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+    }
+}
+
+fn policy_grid() -> Vec<(&'static str, Box<dyn Fn() -> BoxedPolicy>)> {
+    vec![
+        ("huawei-60s", Box::new(|| Box::new(FixedTimeout::huawei()) as BoxedPolicy)),
+        ("latency-min", Box::new(|| Box::new(LatencyMin) as BoxedPolicy)),
+        ("carbon-min", Box::new(|| Box::new(CarbonMin) as BoxedPolicy)),
+        (
+            "dpso-ecolife",
+            Box::new(|| Box::new(Dpso::new(DpsoConfig::default())) as BoxedPolicy),
+        ),
+    ]
+}
+
+#[test]
+fn collection_is_observation_only() {
+    forall("obs collection leaves results bit-identical", 4, 271, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let lambda = *rng.choice(&[0.2, 0.5, 0.8]);
+
+        for (name, factory) in policy_grid() {
+            let base = SimConfig {
+                lambda_carbon: lambda,
+                track_latencies: true,
+                ..SimConfig::default()
+            };
+            let with_obs = SimConfig { collect_obs: true, ..base.clone() };
+
+            let mut p = factory();
+            let off = Simulator::new(&trace, &ci, energy.clone(), base).run(p.as_mut());
+            let mut p = factory();
+            let on =
+                Simulator::new(&trace, &ci, energy.clone(), with_obs.clone()).run(p.as_mut());
+
+            prop_assert!(off.obs.is_none(), "{name}: obs present while disabled");
+            prop_assert!(on.obs.is_some(), "{name}: obs missing while enabled");
+            prop_assert!(
+                off.metrics.cold_starts == on.metrics.cold_starts
+                    && off.metrics.warm_starts == on.metrics.warm_starts
+                    && off.metrics.invocations == on.metrics.invocations,
+                "{name}: counts changed by collection"
+            );
+            for (field, x, y) in [
+                ("keepalive_carbon_g", off.metrics.keepalive_carbon_g, on.metrics.keepalive_carbon_g),
+                ("exec_carbon_g", off.metrics.exec_carbon_g, on.metrics.exec_carbon_g),
+                ("cold_carbon_g", off.metrics.cold_carbon_g, on.metrics.cold_carbon_g),
+                ("cold_latency_s", off.metrics.cold_latency_s, on.metrics.cold_latency_s),
+                ("latency_sum", off.metrics.latency.sum, on.metrics.latency.sum),
+            ] {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{name}: {field} changed by collection: {x:e} vs {y:e}"
+                );
+            }
+            prop_assert!(
+                off.latencies.len() == on.latencies.len()
+                    && off
+                        .latencies
+                        .iter()
+                        .zip(on.latencies.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name}: tracked latencies changed by collection"
+            );
+
+            // Sharded path: same property.
+            let mut p = factory();
+            let sh_on = ShardedSimulator::new(&trace, &ci, energy.clone(), with_obs)
+                .with_shards(4)
+                .run(p.as_mut());
+            prop_assert!(
+                sh_on.metrics.keepalive_carbon_g.to_bits()
+                    == off.metrics.keepalive_carbon_g.to_bits(),
+                "{name}: sharded+obs keepalive carbon drifted"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merged_telemetry_is_shard_count_invariant() {
+    forall("sharded obs == sequential obs", 4, 272, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let nf = trace.functions.len();
+        let cfg = SimConfig { collect_obs: true, ..SimConfig::default() };
+
+        for (name, factory) in policy_grid() {
+            let mut p = factory();
+            let seq = Simulator::new(&trace, &ci, energy.clone(), cfg.clone()).run(p.as_mut());
+            let seq_obs = seq.obs.expect("collection on");
+            let seq_jsonl: Vec<String> =
+                seq_obs.jsonl_lines(name).iter().map(|l| l.to_string()).collect();
+
+            for k in [2usize, 5, nf] {
+                let mut p = factory();
+                let sh = ShardedSimulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                    .with_shards(k)
+                    .run(p.as_mut());
+                let sh_obs = sh.obs.expect("collection on");
+                prop_assert!(
+                    sh_obs == seq_obs,
+                    "{name} k={k}: merged telemetry differs from sequential"
+                );
+                let sh_jsonl: Vec<String> =
+                    sh_obs.jsonl_lines(name).iter().map(|l| l.to_string()).collect();
+                prop_assert!(
+                    sh_jsonl == seq_jsonl,
+                    "{name} k={k}: JSONL rendering differs from sequential"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn totals_track_sim_metrics_bitwise() {
+    forall("obs totals == sim metrics", 5, 273, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let cfg = SimConfig { collect_obs: true, ..SimConfig::default() };
+
+        for (name, factory) in policy_grid() {
+            let mut p = factory();
+            let r = ShardedSimulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                .with_shards(3)
+                .run(p.as_mut());
+            let t = &r.obs.as_ref().expect("collection on").totals;
+            let m = &r.metrics;
+            prop_assert!(
+                t.cold_starts == m.cold_starts && t.warm_starts == m.warm_starts,
+                "{name}: start counts diverge: obs {}/{} vs metrics {}/{}",
+                t.cold_starts,
+                t.warm_starts,
+                m.cold_starts,
+                m.warm_starts
+            );
+            prop_assert!(
+                t.idle_carbon_g.to_bits() == m.keepalive_carbon_g.to_bits(),
+                "{name}: idle carbon diverges: obs {:e} vs metrics {:e}",
+                t.idle_carbon_g,
+                m.keepalive_carbon_g
+            );
+            prop_assert!(
+                t.cold_latency_s.to_bits() == m.cold_latency_s.to_bits(),
+                "{name}: cold latency diverges"
+            );
+            // Exactly one keep-alive decision per invocation.
+            prop_assert!(
+                t.keep_hist.count == m.invocations,
+                "{name}: {} decisions for {} invocations",
+                t.keep_hist.count,
+                m.invocations
+            );
+            prop_assert!(
+                t.cold_hist.count == m.cold_starts,
+                "{name}: cold histogram count diverges"
+            );
+            // The wasted (expiry) subset never exceeds total idle carbon.
+            prop_assert!(
+                t.expiry_carbon_g <= t.idle_carbon_g + 1e-12,
+                "{name}: expiry carbon exceeds idle carbon"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,10 +1,10 @@
 #!/usr/bin/env bash
-# Perf smoke: lint gates + a shrunken sim_throughput run that writes
-# BENCH_sim.json (median ns + invocations/s per label). Run from anywhere;
-# compares nothing itself — commit BENCH_sim.json deltas alongside perf PRs
-# and eyeball the trajectory (EXPERIMENTS.md §Perf).
+# Perf smoke: lint + doc gates plus a shrunken sim_throughput run that
+# writes BENCH_sim.json (median ns + invocations/s per label). Run from
+# anywhere; commit BENCH_sim.json deltas alongside perf PRs and eyeball the
+# trajectory (EXPERIMENTS.md §Perf).
 #
-#   SKIP_LINT=1 scripts/bench_smoke.sh   # benches only, no fmt/clippy
+#   SKIP_LINT=1 scripts/bench_smoke.sh   # benches only, no fmt/clippy/doc
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,6 +13,25 @@ if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     cargo fmt --check
     echo "== cargo clippy (deny warnings) =="
     cargo clippy --all-targets -- -D warnings
+    echo "== cargo doc (deny warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+fi
+
+# Remember the previous disabled-sink baseline before the bench overwrites
+# BENCH_sim.json: the obs layer must not tax the hot path when it is off.
+prev_fixed_ns=""
+if [[ -f BENCH_sim.json ]]; then
+    prev_fixed_ns=$(python3 - <<'EOF'
+import json
+try:
+    doc = json.load(open("BENCH_sim.json"))
+    entry = doc.get("benches", {}).get("sim/fixed-60s")
+    if entry:
+        print(entry["median_ns"])
+except Exception:
+    pass
+EOF
+)
 fi
 
 echo "== bench: sim_throughput --smoke =="
@@ -25,6 +44,28 @@ else
     echo "error: bench did not write BENCH_sim.json" >&2
     exit 1
 fi
+
+# Obs smoke: disabled-sink regression vs the previous baseline (warn-only;
+# smoke boxes are noisy) and the enabled-collection overhead, both from the
+# fresh BENCH_sim.json.
+echo "== obs overhead check =="
+PREV_FIXED_NS="$prev_fixed_ns" python3 - <<'EOF'
+import json, os
+doc = json.load(open("BENCH_sim.json"))
+benches = doc.get("benches", {})
+ns = {name: entry["median_ns"] for name, entry in benches.items()}
+fixed, obs = ns.get("sim/fixed-60s"), ns.get("sim/fixed-60s-obs")
+if fixed and obs:
+    print(f"collection-on overhead: {100.0 * (obs / fixed - 1.0):+.1f}% "
+          f"(sim/fixed-60s-obs vs sim/fixed-60s)")
+prev = os.environ.get("PREV_FIXED_NS")
+if prev and fixed:
+    delta = 100.0 * (fixed / float(prev) - 1.0)
+    print(f"disabled-sink delta vs previous BENCH_sim.json: {delta:+.1f}%")
+    if delta > 2.0:
+        print("warning: disabled-sink sim/fixed-60s regressed >2% — "
+              "check the obs guards before merging")
+EOF
 
 # Sharded replay must be a pure speedup: the same simulate run forced
 # sequential (LACE_SIM_SHARDS=1) and sharded (=4) must print identical
@@ -39,3 +80,22 @@ if [[ "$seq_out" != "$par_out" ]]; then
 fi
 echo "$par_out"
 echo "sharded output identical to sequential"
+
+# Telemetry smoke: a quick experiment with --obs must emit parseable JSONL
+# under results/obs/.
+echo "== obs emission smoke (experiment fig5 --quick --obs) =="
+cargo run --release --quiet --bin lace-rl -- experiment fig5 --quick --obs
+python3 - <<'EOF'
+import glob, json, sys
+files = sorted(glob.glob("results/obs/*.jsonl"))
+if not files:
+    sys.exit("error: no JSONL streams under results/obs/")
+for f in files:
+    with open(f) as fh:
+        n = 0
+        for line in fh:
+            json.loads(line)
+            n += 1
+    print(f"  {f}: {n} lines ok")
+EOF
+echo "obs streams parse clean"
