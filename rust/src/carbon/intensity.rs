@@ -93,6 +93,13 @@ impl CarbonTrace {
         self.integrate(t0, t1) / (t1 - t0)
     }
 
+    /// Start time of the step containing `t` — the instant the sample the
+    /// feed would have delivered at `t` was taken. Used by the stale-carbon
+    /// fallback to anchor its diurnal extrapolation.
+    pub fn step_start(&self, t: f64) -> f64 {
+        (t / self.step_s).floor() * self.step_s
+    }
+
     pub fn duration_s(&self) -> f64 {
         self.step_s * self.values.len() as f64
     }
@@ -166,6 +173,16 @@ mod tests {
         let c = CarbonTrace::constant(250.0);
         assert_eq!(c.at(123456.0), 250.0);
         assert!((c.mean_over(0.0, 1e6) - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_start_floors_to_step_grid() {
+        let c = two_step();
+        assert_eq!(c.step_start(0.0), 0.0);
+        assert_eq!(c.step_start(9.999), 0.0);
+        assert_eq!(c.step_start(10.0), 10.0);
+        assert_eq!(c.step_start(25.0), 20.0);
+        assert_eq!(c.step_start(-3.0), -10.0);
     }
 
     #[test]

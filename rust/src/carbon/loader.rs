@@ -4,6 +4,7 @@
 //! rows in chronological order, one per hour. Extra columns are ignored.
 
 use crate::carbon::intensity::CarbonTrace;
+use crate::carbon::synth::diurnal_prior;
 use crate::util::csv::Table;
 
 /// Load an hourly CI trace from CSV. `region` labels the result.
@@ -27,6 +28,57 @@ pub fn from_table(table: &Table, region: &str) -> anyhow::Result<CarbonTrace> {
     }
     anyhow::ensure!(!values.is_empty(), "empty carbon trace");
     Ok(CarbonTrace::new(region, 3600.0, values))
+}
+
+/// Like [`load_csv`], but tolerates feed gaps: empty or unparsable
+/// `carbon_intensity` cells are filled by extrapolating the nearest earlier
+/// valid sample along the diurnal prior (the same stale-feed fallback the
+/// chaos recovery path uses online). Returns the trace and the number of
+/// rows that were filled.
+pub fn load_csv_filled(path: &str, region: &str) -> anyhow::Result<(CarbonTrace, usize)> {
+    let table = Table::load(path)?;
+    from_table_filled(&table, region)
+}
+
+/// Gap-filling variant of [`from_table`]; see [`load_csv_filled`].
+/// Leading gaps backfill from the first valid sample. Negative values are
+/// still rejected (a present-but-wrong feed is an error, not a gap).
+pub fn from_table_filled(table: &Table, region: &str) -> anyhow::Result<(CarbonTrace, usize)> {
+    let col = table
+        .col("carbon_intensity")
+        .ok_or_else(|| anyhow::anyhow!("missing column 'carbon_intensity'"))?;
+    let mut raw: Vec<Option<f64>> = Vec::with_capacity(table.rows.len());
+    for (ri, row) in table.rows.iter().enumerate() {
+        let v: Option<f64> = row.get(col).and_then(|s| s.parse().ok());
+        if let Some(v) = v {
+            anyhow::ensure!(v >= 0.0, "row {}: negative carbon intensity", ri + 2);
+        }
+        raw.push(v);
+    }
+    anyhow::ensure!(!raw.is_empty(), "empty carbon trace");
+    let first_valid = raw
+        .iter()
+        .position(Option::is_some)
+        .ok_or_else(|| anyhow::anyhow!("no valid carbon_intensity rows to fill from"))?;
+    let mut filled = 0usize;
+    // Rows are hourly; anchor is (value, hour index) of the nearest valid
+    // sample — earlier for trailing gaps, the first valid one for leading.
+    let mut anchor = (raw[first_valid].unwrap(), first_valid);
+    let mut values = Vec::with_capacity(raw.len());
+    for (i, v) in raw.iter().enumerate() {
+        match v {
+            Some(v) => {
+                anchor = (*v, i);
+                values.push(*v);
+            }
+            None => {
+                filled += 1;
+                let (last, j) = anchor;
+                values.push(last * diurnal_prior(i as f64) / diurnal_prior(j as f64));
+            }
+        }
+    }
+    Ok((CarbonTrace::new(region, 3600.0, values), filled))
 }
 
 /// Save a trace back to the same schema.
@@ -64,6 +116,40 @@ mod tests {
         assert!(from_table(&t, "x").is_err());
         let t = Table::read(Cursor::new("other\n1\n")).unwrap();
         assert!(from_table(&t, "x").is_err());
+    }
+
+    #[test]
+    fn fills_gaps_along_diurnal_prior() {
+        use crate::carbon::synth::diurnal_prior;
+        // Hours 0,1 valid; 2,3 missing; 4 valid again.
+        let t = Table::read(Cursor::new(
+            "hour,carbon_intensity\n0,400\n1,410\n2,\n3,x\n4,395\n",
+        ))
+        .unwrap();
+        let (c, filled) = from_table_filled(&t, "gap").unwrap();
+        assert_eq!(filled, 2);
+        assert_eq!(c.values.len(), 5);
+        assert_eq!(c.values[1], 410.0);
+        assert_eq!(c.values[4], 395.0);
+        // Gaps extrapolate the hour-1 anchor along the prior ratio.
+        assert_eq!(c.values[2], 410.0 * diurnal_prior(2.0) / diurnal_prior(1.0));
+        assert_eq!(c.values[3], 410.0 * diurnal_prior(3.0) / diurnal_prior(1.0));
+    }
+
+    #[test]
+    fn leading_gaps_backfill_from_first_valid() {
+        let t =
+            Table::read(Cursor::new("hour,carbon_intensity\n0,\n1,\n2,300\n")).unwrap();
+        let (c, filled) = from_table_filled(&t, "lead").unwrap();
+        assert_eq!(filled, 2);
+        assert_eq!(c.values[2], 300.0);
+        assert!(c.values[0] > 0.0 && c.values[1] > 0.0);
+        // All-gap tables are still an error — nothing to fill from.
+        let t = Table::read(Cursor::new("hour,carbon_intensity\n0,\n1,\n")).unwrap();
+        assert!(from_table_filled(&t, "none").is_err());
+        // Negative values are rejected even in filling mode.
+        let t = Table::read(Cursor::new("carbon_intensity\n-5\n")).unwrap();
+        assert!(from_table_filled(&t, "neg").is_err());
     }
 
     #[test]

@@ -81,9 +81,42 @@ pub fn synth_region(region: Region, days: usize, seed: u64) -> CarbonTrace {
     CarbonTrace::new(region.name(), 3600.0, values)
 }
 
+/// Normalized diurnal carbon-intensity prior: the noise-free SolarHeavy
+/// shape divided by its daily mean, so the prior averages 1.0 over a day.
+/// The stale-carbon fallback (`chaos::recovery::fallback_ci`) uses the
+/// *ratio* of this prior between two times of day to extrapolate a frozen
+/// feed sample along the expected duck curve. `hour` wraps modulo 24 and
+/// accepts negative values.
+pub fn diurnal_prior(hour: f64) -> f64 {
+    let h = hour.rem_euclid(24.0);
+    let solar = if (7.0..19.0).contains(&h) {
+        let x = (h - 13.0) / 6.0;
+        (1.0 - x * x).max(0.0) * 310.0
+    } else {
+        0.0
+    };
+    // Daily mean of the shape: 420 − (∫ solar dh)/24 = 420 − 2480/24.
+    let mean = 420.0 - 2480.0 / 24.0;
+    (420.0 - solar) / mean
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn diurnal_prior_dips_midday_and_averages_one() {
+        assert!(diurnal_prior(13.0) < diurnal_prior(2.0));
+        assert!(diurnal_prior(13.0) < diurnal_prior(20.0));
+        // Wraps: hour 25 ≡ hour 1, negative hours wrap too.
+        assert_eq!(diurnal_prior(25.0), diurnal_prior(1.0));
+        assert_eq!(diurnal_prior(-1.0), diurnal_prior(23.0));
+        // Mean over a day ≈ 1 (trapezoid-free: the shape is piecewise
+        // smooth, so a fine Riemann sum suffices).
+        let n = 24 * 3600;
+        let mean: f64 = (0..n).map(|i| diurnal_prior(i as f64 / 3600.0)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 1e-3, "mean={mean}");
+    }
 
     #[test]
     fn solar_duck_curve_dips_midday() {

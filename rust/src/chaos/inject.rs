@@ -1,0 +1,222 @@
+//! The injector: stateless fault queries keyed on `(seed, func, t, attempt)`.
+//!
+//! Both stacks consult the same injector at the same logical points
+//! (cold-pod spawn, decision-time carbon lookup, decision latency), and
+//! every stochastic draw re-derives its RNG from the event identity — no
+//! mutable state is shared across events. That makes fault outcomes
+//! independent of invocation interleaving, which is what keeps the
+//! function-sharded simulator bit-identical to sequential replay under an
+//! active plan (`rust/tests/property_chaos.rs`). The only mutable state is
+//! the wall-clock driver-stall counter, which never feeds back into
+//! simulated quantities.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::chaos::plan::{Fault, FaultPlan};
+use crate::chaos::recovery::{self, RecoveryConfig};
+use crate::util::rng::Rng;
+
+/// Per-event RNG: hash the event identity into a fresh generator. Pure,
+/// so identical events draw identical faults regardless of ordering.
+fn event_rng(seed: u64, func: u32, t: f64, attempt: u32) -> Rng {
+    let mut h = seed;
+    h ^= (u64::from(func) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= t.to_bits().wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= (u64::from(attempt) + 1).wrapping_mul(0x94D0_49BB_1331_11EB);
+    Rng::new(h)
+}
+
+/// Interprets a [`FaultPlan`] for the engine, router, and driver.
+#[derive(Debug)]
+pub struct ChaosInjector {
+    plan: FaultPlan,
+    /// Carbon-outage windows `(from, until)`.
+    outages: Vec<(f64, f64)>,
+    /// Spawn-failure windows `(from, until, p)`.
+    spawn_windows: Vec<(f64, f64, f64)>,
+    /// Decision-delay windows `(from, until, delay_s)`.
+    delay_windows: Vec<(f64, f64, f64)>,
+    /// Driver stalls `(at, dur)`, sorted by trigger time.
+    stalls: Vec<(f64, f64)>,
+    /// Wall-clock-only count of stalls the driver actually hit.
+    stalls_hit: AtomicU64,
+}
+
+impl ChaosInjector {
+    /// Partition a plan's faults into per-class window lists.
+    pub fn new(plan: FaultPlan) -> Self {
+        let mut outages = Vec::new();
+        let mut spawn_windows = Vec::new();
+        let mut delay_windows = Vec::new();
+        let mut stalls = Vec::new();
+        for f in &plan.faults {
+            match *f {
+                Fault::CarbonOutage { from_s, until_s } => outages.push((from_s, until_s)),
+                Fault::SpawnFailure { from_s, until_s, p } => {
+                    spawn_windows.push((from_s, until_s, p))
+                }
+                Fault::DecisionDelay { from_s, until_s, delay_s } => {
+                    delay_windows.push((from_s, until_s, delay_s))
+                }
+                Fault::DriverStall { at_s, dur_s } => stalls.push((at_s, dur_s)),
+            }
+        }
+        stalls.sort_by(|a, b| a.0.total_cmp(&b.0));
+        ChaosInjector {
+            plan,
+            outages,
+            spawn_windows,
+            delay_windows,
+            stalls,
+            stalls_hit: AtomicU64::new(0),
+        }
+    }
+
+    /// The plan this injector interprets.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The plan's recovery knobs.
+    pub fn recovery(&self) -> &RecoveryConfig {
+        &self.plan.recovery
+    }
+
+    /// True when the plan schedules nothing (injection is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Spawn-failure query for a cold start of `func` at virtual time `t`:
+    /// returns `(total backoff delay, failed attempts)`. `(0.0, 0)` outside
+    /// any window or when the first attempt succeeds.
+    pub fn spawn_delay(&self, func: u32, t: f64) -> (f64, u32) {
+        let p = self
+            .spawn_windows
+            .iter()
+            .find(|(from, until, _)| t >= *from && t < *until)
+            .map(|&(_, _, p)| p);
+        let Some(p) = p else { return (0.0, 0) };
+        let rc = self.recovery();
+        let mut delay = 0.0;
+        let mut attempt = 0u32;
+        while attempt < rc.max_spawn_retries {
+            let mut rng = event_rng(self.plan.seed, func, t, attempt);
+            // rng.f64() ∈ [0, 1), so p = 1.0 always fails — the retry
+            // budget is exhausted deterministically.
+            if rng.f64() >= p {
+                break;
+            }
+            delay += recovery::backoff_delay(rc, rng.f64(), attempt);
+            attempt += 1;
+        }
+        (delay, attempt)
+    }
+
+    /// If the carbon feed is down at `t`, the outage's start time (when
+    /// the last fresh sample arrived); `None` when the feed is healthy.
+    pub fn stale_since(&self, t: f64) -> Option<f64> {
+        self.outages
+            .iter()
+            .find(|(from, until)| t >= *from && t < *until)
+            .map(|&(from, _)| from)
+    }
+
+    /// The degraded carbon estimate during an outage that began at
+    /// `outage_start` (from [`ChaosInjector::stale_since`]).
+    pub fn fallback_ci(&self, ci: &CarbonTrace, t: f64, outage_start: f64) -> f64 {
+        recovery::fallback_ci(ci, t, outage_start)
+    }
+
+    /// True when the injected decision latency at `t` exceeds the recovery
+    /// timeout — the decision is discarded and the fallback action applies.
+    pub fn decision_degraded(&self, t: f64) -> bool {
+        self.delay_windows
+            .iter()
+            .any(|(from, until, d)| t >= *from && t < *until && *d > self.recovery().decision_timeout_s)
+    }
+
+    /// Driver-stall schedule, sorted by trigger time.
+    pub fn stall_windows(&self) -> &[(f64, f64)] {
+        &self.stalls
+    }
+
+    /// Record that the driver hit one stall (wall-clock accounting only).
+    pub fn note_stall(&self) {
+        self.stalls_hit.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Stalls the driver hit this run.
+    pub fn stalls_hit(&self) -> u64 {
+        self.stalls_hit.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window_plan(p: f64) -> FaultPlan {
+        FaultPlan {
+            seed: 7,
+            faults: vec![
+                Fault::SpawnFailure { from_s: 100.0, until_s: 200.0, p },
+                Fault::CarbonOutage { from_s: 300.0, until_s: 400.0 },
+                Fault::DecisionDelay { from_s: 500.0, until_s: 600.0, delay_s: 2.0 },
+                Fault::DriverStall { at_s: 50.0, dur_s: 0.1 },
+            ],
+            recovery: RecoveryConfig::default(),
+        }
+    }
+
+    #[test]
+    fn spawn_delay_outside_window_is_zero() {
+        let inj = ChaosInjector::new(window_plan(1.0));
+        assert_eq!(inj.spawn_delay(3, 99.0), (0.0, 0));
+        assert_eq!(inj.spawn_delay(3, 200.0), (0.0, 0));
+    }
+
+    #[test]
+    fn certain_failure_exhausts_retry_budget() {
+        let inj = ChaosInjector::new(window_plan(1.0));
+        let (delay, attempts) = inj.spawn_delay(3, 150.0);
+        assert_eq!(attempts, RecoveryConfig::default().max_spawn_retries);
+        assert!(delay > 0.0);
+    }
+
+    #[test]
+    fn zero_probability_never_fails() {
+        let inj = ChaosInjector::new(window_plan(0.0));
+        assert_eq!(inj.spawn_delay(3, 150.0), (0.0, 0));
+    }
+
+    #[test]
+    fn spawn_delay_is_a_pure_function_of_the_event() {
+        let a = ChaosInjector::new(window_plan(0.5));
+        let b = ChaosInjector::new(window_plan(0.5));
+        for func in 0..20u32 {
+            let t = 100.0 + f64::from(func);
+            assert_eq!(a.spawn_delay(func, t), b.spawn_delay(func, t));
+            // Re-querying the same injector is also stable (statelessness).
+            assert_eq!(a.spawn_delay(func, t), a.spawn_delay(func, t));
+        }
+    }
+
+    #[test]
+    fn stale_and_degraded_windows() {
+        let inj = ChaosInjector::new(window_plan(1.0));
+        assert_eq!(inj.stale_since(350.0), Some(300.0));
+        assert_eq!(inj.stale_since(250.0), None);
+        assert!(inj.decision_degraded(550.0)); // 2.0 s > 1.0 s timeout
+        assert!(!inj.decision_degraded(450.0));
+    }
+
+    #[test]
+    fn sub_timeout_delay_does_not_degrade() {
+        let mut plan = window_plan(1.0);
+        plan.faults = vec![Fault::DecisionDelay { from_s: 0.0, until_s: 10.0, delay_s: 0.5 }];
+        let inj = ChaosInjector::new(plan);
+        assert!(!inj.decision_degraded(5.0));
+    }
+}

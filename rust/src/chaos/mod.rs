@@ -1,0 +1,41 @@
+//! Deterministic fault injection and resilience (DESIGN.md §10).
+//!
+//! The serving and simulation stacks assume a perfect world: the
+//! carbon-intensity feed is always fresh, pods always spawn, policy
+//! decisions always return in time. Emission-aware platforms must stay
+//! correct when those assumptions break (GreenWhisk), and carbon-aware
+//! decisions degrade sharply when the intensity signal is wrong (EcoLife).
+//! This module makes failure a first-class, *measured* input:
+//!
+//! * [`plan::FaultPlan`] — a seeded, JSON-serializable schedule of fault
+//!   windows: carbon-feed outages, pod-spawn failures with probability `p`,
+//!   decision-latency spikes, trace-driver stalls.
+//! * [`inject::ChaosInjector`] — stateless, hash-keyed queries the engine,
+//!   router, and driver consult at their injection points. Every stochastic
+//!   draw is a pure function of `(plan seed, function id, virtual time,
+//!   attempt)`, so the same plan replays bit-identically across runs, shard
+//!   counts, and both stacks.
+//! * [`recovery`] — the graceful-degradation half: exponential-backoff
+//!   pod-spawn retry with jitter from [`crate::util::rng`], stale-carbon
+//!   fallback to the last-known sample scaled by a diurnal prior
+//!   ([`crate::carbon::synth::diurnal_prior`]), and a decision timeout that
+//!   degrades to the static fixed-keep-alive action.
+//! * [`report`] — degraded-mode accounting: per-function
+//!   [`report::ChaosCounters`] folded through the same id-order merge
+//!   contract as [`crate::simulator::metrics::SimMetrics`], plus the
+//!   `CHAOS_SUMMARY` line the tooling parses.
+//!
+//! Invariants (property-tested in `rust/tests/property_chaos.rs`):
+//! same plan + seed ⇒ bit-identical reports across runs and shard counts;
+//! no plan (or an empty one) ⇒ behavior byte-identical to a run without
+//! this module.
+
+pub mod inject;
+pub mod plan;
+pub mod recovery;
+pub mod report;
+
+pub use inject::ChaosInjector;
+pub use plan::{Fault, FaultPlan};
+pub use recovery::RecoveryConfig;
+pub use report::{ChaosCounters, ChaosReport};

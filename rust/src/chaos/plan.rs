@@ -1,0 +1,282 @@
+//! The `FaultPlan` DSL: a seeded, serializable schedule of fault windows.
+//!
+//! A plan is data, not behavior — the [`crate::chaos::ChaosInjector`]
+//! interprets it. Serialization goes through [`crate::util::json`] so plans
+//! can be saved, diffed, and replayed across hosts (`lace-rl chaos
+//! --save-plan` / `--plan`). Seeds round-trip through f64 JSON numbers, so
+//! keep them below 2⁵³ (every seed in this repo is).
+
+use crate::chaos::recovery::RecoveryConfig;
+use crate::util::json::Json;
+
+/// One scheduled fault. All times are virtual workload seconds (the same
+/// clock as trace arrivals), so a plan means the same thing to the
+/// simulator and to the online coordinator replaying at any speedup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// The carbon-intensity feed stops updating during `[from_s, until_s)`:
+    /// decisions see the stale-fallback estimate instead of the live value.
+    /// Accounting always uses the true trace — only the *signal* degrades.
+    CarbonOutage {
+        /// Window start (virtual s).
+        from_s: f64,
+        /// Window end (virtual s, exclusive).
+        until_s: f64,
+    },
+    /// Pod spawns during the window fail independently with probability
+    /// `p`; each failed attempt costs one backoff delay (recovery policy)
+    /// before the next attempt. The spawn always succeeds within the
+    /// retry budget — no invocation is dropped.
+    SpawnFailure {
+        /// Window start (virtual s).
+        from_s: f64,
+        /// Window end (virtual s, exclusive).
+        until_s: f64,
+        /// Per-attempt failure probability in [0, 1].
+        p: f64,
+    },
+    /// Keep-alive decisions issued during the window take `delay_s` extra
+    /// seconds; past the recovery timeout the decision is discarded and
+    /// the static fallback action applies.
+    DecisionDelay {
+        /// Window start (virtual s).
+        from_s: f64,
+        /// Window end (virtual s, exclusive).
+        until_s: f64,
+        /// Injected decision latency (s).
+        delay_s: f64,
+    },
+    /// The trace driver stalls for `dur_s` wall-clock seconds before
+    /// sending the first invocation at or after `at_s` (paced replay only;
+    /// max-speed replay counts the stall without sleeping).
+    DriverStall {
+        /// Virtual time the stall triggers at.
+        at_s: f64,
+        /// Wall-clock stall duration (s).
+        dur_s: f64,
+    },
+}
+
+/// A complete fault schedule plus the recovery policy parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every stochastic draw the plan induces (spawn-failure
+    /// Bernoulli trials, backoff jitter). Same seed ⇒ same faults.
+    pub seed: u64,
+    /// The scheduled faults, in any order.
+    pub faults: Vec<Fault>,
+    /// Recovery-policy knobs (retry budget, backoff, decision timeout).
+    pub recovery: RecoveryConfig,
+}
+
+impl FaultPlan {
+    /// A plan with no faults: installing it is byte-identical to
+    /// installing no plan at all (property-tested).
+    pub fn empty(seed: u64) -> Self {
+        FaultPlan { seed, faults: Vec::new(), recovery: RecoveryConfig::default() }
+    }
+
+    /// The canned smoke/sweep plan: fault windows positioned inside the
+    /// workload span `[t0, t1]`, scaled by `intensity` ∈ [0, 1].
+    /// Intensity 0 is the empty plan; intensity 1 exercises every fault
+    /// class (spawn failures at p=1, a long carbon outage, decision delays
+    /// past the recovery timeout, one driver stall).
+    pub fn canned(seed: u64, t0: f64, t1: f64, intensity: f64) -> Self {
+        let x = intensity.clamp(0.0, 1.0);
+        let mut faults = Vec::new();
+        if x > 0.0 {
+            let span = (t1 - t0).max(1.0);
+            faults.push(Fault::SpawnFailure {
+                from_s: t0,
+                until_s: t0 + 0.40 * span,
+                p: x,
+            });
+            faults.push(Fault::CarbonOutage {
+                from_s: t0 + 0.45 * span,
+                until_s: t0 + (0.45 + 0.30 * x) * span,
+            });
+            faults.push(Fault::DecisionDelay {
+                from_s: t0 + 0.80 * span,
+                until_s: t1 + 120.0,
+                delay_s: 2.5 * x,
+            });
+            faults.push(Fault::DriverStall { at_s: t0 + 0.50 * span, dur_s: 0.05 });
+        }
+        FaultPlan { seed, faults, recovery: RecoveryConfig::default() }
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Total carbon-outage seconds within `[0, t_end]` — the time the
+    /// stale-carbon fallback was the decision signal.
+    pub fn outage_seconds(&self, t_end: f64) -> f64 {
+        self.faults
+            .iter()
+            .map(|f| match f {
+                Fault::CarbonOutage { from_s, until_s } => {
+                    (until_s.min(t_end) - from_s.max(0.0)).max(0.0)
+                }
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Serialize to the JSON schema documented in EXPERIMENTS.md.
+    pub fn to_json(&self) -> Json {
+        let faults = self
+            .faults
+            .iter()
+            .map(|f| match *f {
+                Fault::CarbonOutage { from_s, until_s } => Json::obj(vec![
+                    ("kind", "carbon-outage".into()),
+                    ("from_s", from_s.into()),
+                    ("until_s", until_s.into()),
+                ]),
+                Fault::SpawnFailure { from_s, until_s, p } => Json::obj(vec![
+                    ("kind", "spawn-failure".into()),
+                    ("from_s", from_s.into()),
+                    ("until_s", until_s.into()),
+                    ("p", p.into()),
+                ]),
+                Fault::DecisionDelay { from_s, until_s, delay_s } => Json::obj(vec![
+                    ("kind", "decision-delay".into()),
+                    ("from_s", from_s.into()),
+                    ("until_s", until_s.into()),
+                    ("delay_s", delay_s.into()),
+                ]),
+                Fault::DriverStall { at_s, dur_s } => Json::obj(vec![
+                    ("kind", "driver-stall".into()),
+                    ("at_s", at_s.into()),
+                    ("dur_s", dur_s.into()),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("seed", self.seed.into()),
+            ("recovery", self.recovery.to_json()),
+            ("faults", Json::Arr(faults)),
+        ])
+    }
+
+    /// Parse a plan from its JSON form.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("fault plan: missing numeric 'seed'"))?
+            as u64;
+        let recovery = match j.get("recovery") {
+            Some(r) => RecoveryConfig::from_json(r)?,
+            None => RecoveryConfig::default(),
+        };
+        let mut faults = Vec::new();
+        for (i, f) in j
+            .get("faults")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("fault plan: missing 'faults' array"))?
+            .iter()
+            .enumerate()
+        {
+            let num = |key: &str| -> anyhow::Result<f64> {
+                f.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("fault {i}: missing numeric '{key}'"))
+            };
+            let kind = f
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("fault {i}: missing 'kind'"))?;
+            faults.push(match kind {
+                "carbon-outage" => Fault::CarbonOutage {
+                    from_s: num("from_s")?,
+                    until_s: num("until_s")?,
+                },
+                "spawn-failure" => {
+                    let p = num("p")?;
+                    anyhow::ensure!((0.0..=1.0).contains(&p), "fault {i}: p out of [0,1]");
+                    Fault::SpawnFailure { from_s: num("from_s")?, until_s: num("until_s")?, p }
+                }
+                "decision-delay" => Fault::DecisionDelay {
+                    from_s: num("from_s")?,
+                    until_s: num("until_s")?,
+                    delay_s: num("delay_s")?,
+                },
+                "driver-stall" => {
+                    Fault::DriverStall { at_s: num("at_s")?, dur_s: num("dur_s")? }
+                }
+                other => anyhow::bail!("fault {i}: unknown kind '{other}'"),
+            });
+        }
+        Ok(FaultPlan { seed, faults, recovery })
+    }
+
+    /// Write the plan as pretty-enough single-line JSON.
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Load a plan saved by [`FaultPlan::save`].
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)?;
+        let j = Json::parse(src.trim())
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_plan() {
+        let plan = FaultPlan::canned(42, 100.0, 1100.0, 0.7);
+        let j = plan.to_json().to_string();
+        let back = FaultPlan::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn intensity_zero_is_empty() {
+        assert!(FaultPlan::canned(1, 0.0, 1000.0, 0.0).is_empty());
+        assert!(!FaultPlan::canned(1, 0.0, 1000.0, 0.1).is_empty());
+    }
+
+    #[test]
+    fn outage_seconds_clip_to_horizon() {
+        let plan = FaultPlan {
+            seed: 0,
+            faults: vec![Fault::CarbonOutage { from_s: 100.0, until_s: 300.0 }],
+            recovery: RecoveryConfig::default(),
+        };
+        assert_eq!(plan.outage_seconds(1000.0), 200.0);
+        assert_eq!(plan.outage_seconds(200.0), 100.0);
+        assert_eq!(plan.outage_seconds(50.0), 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_plans() {
+        for src in [
+            r#"{"faults": []}"#,
+            r#"{"seed": 1}"#,
+            r#"{"seed": 1, "faults": [{"kind": "bogus"}]}"#,
+            r#"{"seed": 1, "faults": [{"kind": "spawn-failure", "from_s": 0, "until_s": 1, "p": 2.0}]}"#,
+        ] {
+            assert!(FaultPlan::from_json(&Json::parse(src).unwrap()).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let plan = FaultPlan::canned(9, 0.0, 500.0, 1.0);
+        let path = std::env::temp_dir().join("lace_rl_fault_plan_rt.json");
+        let path = path.to_str().unwrap();
+        plan.save(path).unwrap();
+        assert_eq!(FaultPlan::load(path).unwrap(), plan);
+        let _ = std::fs::remove_file(path);
+    }
+}

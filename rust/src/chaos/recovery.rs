@@ -1,0 +1,151 @@
+//! Recovery policies: what the stack does *instead* of failing.
+//!
+//! Three degradation paths, one per fault class:
+//!
+//! * **Spawn retry** — exponential backoff with multiplicative jitter;
+//!   delays come out of [`backoff_delay`] and are charged as extra
+//!   cold-start latency.
+//! * **Stale-carbon fallback** — [`fallback_ci`] extrapolates the
+//!   last-known intensity sample along the diurnal prior
+//!   ([`crate::carbon::synth::diurnal_prior`]), so a feed outage at noon
+//!   doesn't freeze a solar-dip value into the evening ramp.
+//! * **Decision timeout** — handled by the injector/caller: a decision
+//!   slower than [`RecoveryConfig::decision_timeout_s`] is discarded and
+//!   the static [`RecoveryConfig::fallback_action`] keep-alive applies.
+
+use crate::carbon::intensity::CarbonTrace;
+use crate::carbon::synth::diurnal_prior;
+use crate::util::json::Json;
+
+/// Knobs for the three recovery paths. Serialized inside the
+/// [`crate::chaos::FaultPlan`] so a plan fully determines behavior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    /// Maximum extra spawn attempts after the first failure.
+    pub max_spawn_retries: u32,
+    /// Backoff delay of the first retry (seconds).
+    pub backoff_base_s: f64,
+    /// Upper bound on a single backoff delay (seconds).
+    pub backoff_cap_s: f64,
+    /// Jitter fraction: each delay is scaled by `1 + jitter_frac·u`,
+    /// `u ∈ [0, 1)` drawn from the plan-seeded stream.
+    pub jitter_frac: f64,
+    /// Decisions slower than this degrade to the fallback action (seconds).
+    pub decision_timeout_s: f64,
+    /// Index into [`crate::KEEP_ALIVE_ACTIONS`] used when degraded
+    /// (default: the 60 s Huawei production timeout).
+    pub fallback_action: usize,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            max_spawn_retries: 4,
+            backoff_base_s: 0.5,
+            backoff_cap_s: 8.0,
+            jitter_frac: 0.5,
+            decision_timeout_s: 1.0,
+            fallback_action: 4,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Serialize for embedding in a fault plan.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_spawn_retries", u64::from(self.max_spawn_retries).into()),
+            ("backoff_base_s", self.backoff_base_s.into()),
+            ("backoff_cap_s", self.backoff_cap_s.into()),
+            ("jitter_frac", self.jitter_frac.into()),
+            ("decision_timeout_s", self.decision_timeout_s.into()),
+            ("fallback_action", (self.fallback_action as u64).into()),
+        ])
+    }
+
+    /// Parse; absent keys keep their defaults so plans stay forward-readable.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = RecoveryConfig::default();
+        let num = |key: &str, fallback: f64| j.get(key).and_then(Json::as_f64).unwrap_or(fallback);
+        let cfg = RecoveryConfig {
+            max_spawn_retries: num("max_spawn_retries", f64::from(d.max_spawn_retries)) as u32,
+            backoff_base_s: num("backoff_base_s", d.backoff_base_s),
+            backoff_cap_s: num("backoff_cap_s", d.backoff_cap_s),
+            jitter_frac: num("jitter_frac", d.jitter_frac),
+            decision_timeout_s: num("decision_timeout_s", d.decision_timeout_s),
+            fallback_action: num("fallback_action", d.fallback_action as f64) as usize,
+        };
+        anyhow::ensure!(
+            cfg.fallback_action < crate::KEEP_ALIVE_ACTIONS.len(),
+            "recovery: fallback_action {} out of range",
+            cfg.fallback_action
+        );
+        Ok(cfg)
+    }
+}
+
+/// Backoff delay for retry number `attempt` (0-based): `min(base·2^attempt,
+/// cap) · (1 + jitter_frac·jitter01)` with `jitter01 ∈ [0, 1)` supplied by
+/// the caller from the plan-seeded stream — the function itself is pure.
+pub fn backoff_delay(cfg: &RecoveryConfig, jitter01: f64, attempt: u32) -> f64 {
+    let base = (cfg.backoff_base_s * f64::powi(2.0, attempt as i32)).min(cfg.backoff_cap_s);
+    base * (1.0 + cfg.jitter_frac * jitter01)
+}
+
+/// Stale-carbon estimate at time `t` given the feed froze at
+/// `outage_start`: the last sample the feed delivered (the step containing
+/// `outage_start`), scaled by the ratio of the diurnal prior now vs. then.
+/// Floored at 1 gCO₂/kWh so downstream cost ratios stay finite.
+pub fn fallback_ci(ci: &CarbonTrace, t: f64, outage_start: f64) -> f64 {
+    let last_known = ci.at(outage_start);
+    let t_last = ci.step_start(outage_start);
+    (last_known * diurnal_prior(t / 3600.0) / diurnal_prior(t_last / 3600.0)).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let cfg = RecoveryConfig::default();
+        assert_eq!(backoff_delay(&cfg, 0.0, 0), 0.5);
+        assert_eq!(backoff_delay(&cfg, 0.0, 1), 1.0);
+        assert_eq!(backoff_delay(&cfg, 0.0, 2), 2.0);
+        assert_eq!(backoff_delay(&cfg, 0.0, 10), 8.0); // capped
+    }
+
+    #[test]
+    fn jitter_scales_multiplicatively() {
+        let cfg = RecoveryConfig::default();
+        let dry = backoff_delay(&cfg, 0.0, 1);
+        let wet = backoff_delay(&cfg, 0.999, 1);
+        assert!(wet > dry && wet < dry * (1.0 + cfg.jitter_frac));
+    }
+
+    #[test]
+    fn fallback_tracks_diurnal_shape() {
+        // Constant trace: the prior ratio is the only signal. An outage
+        // starting in the solar dip (13:00) should extrapolate *upward*
+        // into the evening (20:00), not freeze the dip value.
+        let ci = CarbonTrace::constant(300.0);
+        let est_evening = fallback_ci(&ci, 20.0 * 3600.0, 13.0 * 3600.0);
+        assert!(est_evening > 300.0, "got {est_evening}");
+        // Extrapolating within the same hour is a no-op.
+        let same = fallback_ci(&ci, 13.0 * 3600.0, 13.0 * 3600.0);
+        assert!((same - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_json_roundtrip_and_defaults() {
+        let cfg = RecoveryConfig { max_spawn_retries: 7, ..Default::default() };
+        let back = RecoveryConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // Empty object → all defaults.
+        let d = RecoveryConfig::from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(d, RecoveryConfig::default());
+        // Out-of-range fallback action rejected.
+        let bad = Json::obj(vec![("fallback_action", 99u64.into())]);
+        assert!(RecoveryConfig::from_json(&bad).is_err());
+    }
+}

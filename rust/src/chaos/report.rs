@@ -1,0 +1,141 @@
+//! Degraded-mode accounting: what actually happened under the plan.
+//!
+//! [`ChaosCounters`] lives inside the per-function
+//! [`crate::simulator::metrics::SimMetrics`] partials and merges through
+//! the same ascending-id fold, so counts are shard-count-invariant.
+//! [`ChaosReport`] packages the counters with driver-side and plan-derived
+//! quantities and renders the `CHAOS_SUMMARY` line the tooling
+//! (`scripts/bench_smoke.sh`) parses.
+
+use crate::chaos::plan::FaultPlan;
+use crate::util::json::Json;
+
+/// Event counts accumulated on the decision path. Plain sums on merge.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChaosCounters {
+    /// Failed pod-spawn attempts that were retried.
+    pub spawn_retries: u64,
+    /// Total backoff delay charged to cold starts (seconds).
+    pub retry_delay_s: f64,
+    /// Keep-alive decisions that timed out to the static fallback action.
+    pub degraded_decisions: u64,
+    /// Decisions made against the stale-carbon fallback estimate.
+    pub stale_ci_decisions: u64,
+}
+
+impl ChaosCounters {
+    /// Fold another partial in (plain sums; call in ascending function-id
+    /// order like the rest of the metrics merge).
+    pub fn merge(&mut self, other: &ChaosCounters) {
+        self.spawn_retries += other.spawn_retries;
+        self.retry_delay_s += other.retry_delay_s;
+        self.degraded_decisions += other.degraded_decisions;
+        self.stale_ci_decisions += other.stale_ci_decisions;
+    }
+
+    /// True when any degraded path was taken.
+    pub fn any(&self) -> bool {
+        self.spawn_retries > 0 || self.degraded_decisions > 0 || self.stale_ci_decisions > 0
+    }
+}
+
+/// End-of-run resilience report for one serve/simulate under a plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosReport {
+    /// Decision-path counters (shard-merged).
+    pub counters: ChaosCounters,
+    /// Driver stalls actually hit (wall-clock accounting).
+    pub driver_stalls: u64,
+    /// Seconds the carbon feed was down within the run horizon.
+    pub fallback_s: f64,
+}
+
+impl ChaosReport {
+    /// Assemble the report; `fallback_s` comes from the plan's outage
+    /// windows clipped to the run horizon `t_end`.
+    pub fn new(counters: ChaosCounters, driver_stalls: u64, plan: &FaultPlan, t_end: f64) -> Self {
+        ChaosReport { counters, driver_stalls, fallback_s: plan.outage_seconds(t_end) }
+    }
+
+    /// Total fault events injected across all classes.
+    pub fn faults_injected(&self) -> u64 {
+        self.counters.spawn_retries
+            + self.counters.degraded_decisions
+            + self.counters.stale_ci_decisions
+            + self.driver_stalls
+    }
+
+    /// JSON form (one `chaos` line in the serve obs stream).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("faults_injected", self.faults_injected().into()),
+            ("spawn_retries", self.counters.spawn_retries.into()),
+            ("retry_delay_s", self.counters.retry_delay_s.into()),
+            ("degraded_decisions", self.counters.degraded_decisions.into()),
+            ("stale_ci_decisions", self.counters.stale_ci_decisions.into()),
+            ("driver_stalls", self.driver_stalls.into()),
+            ("fallback_s", self.fallback_s.into()),
+        ])
+    }
+
+    /// The greppable one-liner (`CHAOS_SUMMARY {json}`) printed after a
+    /// serve report when a plan is installed.
+    pub fn summary_line(&self) -> String {
+        format!("CHAOS_SUMMARY {}", self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_plain_sums() {
+        let mut a = ChaosCounters {
+            spawn_retries: 1,
+            retry_delay_s: 0.5,
+            degraded_decisions: 2,
+            stale_ci_decisions: 3,
+        };
+        let b = ChaosCounters {
+            spawn_retries: 10,
+            retry_delay_s: 1.5,
+            degraded_decisions: 20,
+            stale_ci_decisions: 30,
+        };
+        a.merge(&b);
+        assert_eq!(a.spawn_retries, 11);
+        assert_eq!(a.retry_delay_s, 2.0);
+        assert_eq!(a.degraded_decisions, 22);
+        assert_eq!(a.stale_ci_decisions, 33);
+        assert!(a.any());
+        assert!(!ChaosCounters::default().any());
+    }
+
+    #[test]
+    fn summary_line_is_parseable_and_complete() {
+        let plan = FaultPlan::canned(1, 0.0, 1000.0, 1.0);
+        let report = ChaosReport::new(
+            ChaosCounters { spawn_retries: 4, retry_delay_s: 2.0, ..Default::default() },
+            1,
+            &plan,
+            1000.0,
+        );
+        let line = report.summary_line();
+        let json = line.strip_prefix("CHAOS_SUMMARY ").unwrap();
+        let j = Json::parse(json).unwrap();
+        for key in [
+            "faults_injected",
+            "spawn_retries",
+            "retry_delay_s",
+            "degraded_decisions",
+            "stale_ci_decisions",
+            "driver_stalls",
+            "fallback_s",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("faults_injected").and_then(Json::as_usize), Some(5));
+        assert!(j.get("fallback_s").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

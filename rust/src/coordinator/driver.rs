@@ -4,11 +4,19 @@
 //! Supports max-speed replay (throughput measurement) and paced replay at a
 //! configurable time acceleration (latency realism). Runs on its own
 //! thread; the channel provides natural backpressure.
+//!
+//! With a [`ChaosInjector`] attached ([`spawn_driver_chaos`]), the driver
+//! honors the plan's stall windows: replay pauses wall-clock time when
+//! virtual time crosses a stall, without perturbing the virtual timestamps
+//! delivered downstream — so injected stalls never change the simulated
+//! outcome, only the wall-clock envelope (and the degraded-mode counters).
 
 use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::chaos::ChaosInjector;
 use crate::coordinator::router::InvocationRequest;
 use crate::trace::model::Trace;
 
@@ -21,6 +29,10 @@ pub enum Pace {
     RealTime { speedup: f64 },
 }
 
+/// Longest wall-clock pause a single injected stall may impose (seconds);
+/// keeps a corrupt plan from wedging the driver thread.
+const MAX_STALL_SLEEP_S: f64 = 5.0;
+
 /// Stream `trace` into `tx` on a new thread. Returns the join handle; the
 /// channel is closed when the trace ends.
 pub fn spawn_driver(
@@ -28,16 +40,56 @@ pub fn spawn_driver(
     pace: Pace,
     tx: SyncSender<InvocationRequest>,
 ) -> JoinHandle<u64> {
+    spawn_driver_chaos(trace, pace, tx, None)
+}
+
+/// [`spawn_driver`] with an optional fault injector for stall windows.
+///
+/// A non-finite or non-positive `RealTime` speedup would turn the sleep
+/// targets into NaN or infinity (a NaN `(t - t0) / speedup` survives the
+/// `.max(0.0)` clamp because NaN comparisons are false, and `speedup = 0`
+/// yields infinite targets); such values fall back to max-speed replay
+/// with a warning instead.
+pub fn spawn_driver_chaos(
+    trace: &Trace,
+    pace: Pace,
+    tx: SyncSender<InvocationRequest>,
+    chaos: Option<Arc<ChaosInjector>>,
+) -> JoinHandle<u64> {
+    let pace = match pace {
+        Pace::RealTime { speedup } if !(speedup.is_finite() && speedup > 0.0) => {
+            eprintln!(
+                "[driver] invalid replay speedup {speedup}; falling back to max-speed"
+            );
+            Pace::MaxSpeed
+        }
+        p => p,
+    };
     let invocations: Vec<(f64, u32, f64)> = trace
         .invocations
         .iter()
         .map(|i| (i.t, i.func, i.exec_s))
         .collect();
+    let stalls: Vec<(f64, f64)> = chaos
+        .as_deref()
+        .map(|ch| ch.stall_windows().to_vec())
+        .unwrap_or_default();
     std::thread::spawn(move || {
         let start = Instant::now();
         let t0 = invocations.first().map(|x| x.0).unwrap_or(0.0);
         let mut sent = 0u64;
+        let mut si = 0usize; // next stall to trigger (sorted by time)
         for (id, (t, func, exec_s)) in invocations.into_iter().enumerate() {
+            while si < stalls.len() && t >= stalls[si].0 {
+                if let Some(ch) = chaos.as_deref() {
+                    ch.note_stall();
+                }
+                if let Pace::RealTime { .. } = pace {
+                    let dur = stalls[si].1.clamp(0.0, MAX_STALL_SLEEP_S);
+                    std::thread::sleep(Duration::from_secs_f64(dur));
+                }
+                si += 1;
+            }
             if let Pace::RealTime { speedup } = pace {
                 let target = Duration::from_secs_f64(((t - t0) / speedup).max(0.0));
                 let elapsed = start.elapsed();
@@ -116,5 +168,45 @@ mod tests {
         h.join().unwrap();
         // 0.4s / 4x = 0.1s minimum wall time.
         assert!(start.elapsed() >= Duration::from_millis(90));
+    }
+
+    #[test]
+    fn invalid_speedups_fall_back_to_max_speed() {
+        // NaN and zero speedups used to produce NaN / infinite sleep
+        // targets; both must now deliver the whole trace promptly.
+        for speedup in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+            let t = trace(50);
+            let (tx, rx) = sync_channel(64);
+            let start = Instant::now();
+            let h = spawn_driver(&t, Pace::RealTime { speedup }, tx);
+            let got: Vec<_> = rx.iter().collect();
+            assert_eq!(h.join().unwrap(), 50, "speedup {speedup}");
+            assert_eq!(got.len(), 50);
+            assert!(start.elapsed() < Duration::from_secs(2), "speedup {speedup}");
+        }
+    }
+
+    #[test]
+    fn stall_windows_counted_without_perturbing_timestamps() {
+        use crate::chaos::{ChaosInjector, Fault, FaultPlan, RecoveryConfig};
+        let plan = FaultPlan {
+            seed: 3,
+            faults: vec![
+                Fault::DriverStall { at_s: 0.15, dur_s: 0.01 },
+                Fault::DriverStall { at_s: 0.35, dur_s: 0.01 },
+            ],
+            recovery: RecoveryConfig::default(),
+        };
+        let inj = Arc::new(ChaosInjector::new(plan));
+        let t = trace(10);
+        let (tx, rx) = sync_channel(16);
+        let h = spawn_driver_chaos(&t, Pace::MaxSpeed, tx, Some(inj.clone()));
+        let got: Vec<InvocationRequest> = rx.iter().collect();
+        assert_eq!(h.join().unwrap(), 10);
+        assert_eq!(inj.stalls_hit(), 2);
+        // Virtual timestamps are untouched by the stalls.
+        for (i, req) in got.iter().enumerate() {
+            assert!((req.t - i as f64 * 0.1).abs() < 1e-12);
+        }
     }
 }

@@ -2,9 +2,11 @@
 //!
 //! The same semantics as the simulator's pools (MRU selection, lazy
 //! expiry) but organized for incremental online use with out-of-order
-//! queries per function.
+//! queries per function. Pending keep-alive decisions ride on the pods
+//! ([`Pending`]) so the router can resolve policy outcomes — and attribute
+//! a cold start to exactly one tied expiry — with the engine's semantics.
 
-use crate::simulator::pod::Pod;
+use crate::simulator::pod::{Pending, Pod};
 
 /// Result of a pool query for an arrival.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -13,12 +15,25 @@ pub enum StartKind {
     Cold,
 }
 
+/// A pod whose keep-alive window lapsed, drained via
+/// [`PodManager::drain_expired`] for the caller to account.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpiredPod {
+    pub func: u32,
+    /// Start of the idle period that ended in expiry.
+    pub idle_start: f64,
+    /// When the keep-alive window lapsed.
+    pub warm_until: f64,
+    /// The unresolved keep-alive decision, if one was armed.
+    pub pending: Option<Pending>,
+}
+
 /// Per-function warm pools with lazy expiry.
 #[derive(Debug, Default)]
 pub struct PodManager {
     pools: Vec<Vec<Pod>>,
-    /// Pods expired since the last drain (idle_start, warm_until, func).
-    expired: Vec<(u32, f64, f64)>,
+    /// Pods expired since the last drain.
+    expired: Vec<ExpiredPod>,
 }
 
 impl PodManager {
@@ -34,16 +49,17 @@ impl PodManager {
     }
 
     /// Serve an arrival at time `t`: returns Warm (and closes that pod's
-    /// idle period, reported via `on_idle_span`) or Cold (allocating a new
-    /// pod busy until `completion`). Expired pods are collected for the
-    /// caller to account (`drain_expired`).
+    /// idle period, reported via `on_idle_span`, handing back its pending
+    /// decision for outcome resolution) or Cold (allocating a new pod busy
+    /// until `completion`). Expired pods are collected for the caller to
+    /// account (`drain_expired`).
     pub fn acquire(
         &mut self,
         func: u32,
         t: f64,
         completion: f64,
         mut on_idle_span: impl FnMut(f64, f64),
-    ) -> (StartKind, usize) {
+    ) -> (StartKind, usize, Option<Pending>) {
         self.ensure(func);
         let pool = &mut self.pools[func as usize];
 
@@ -52,7 +68,12 @@ impl PodManager {
         while i < pool.len() {
             if pool[i].expired(t) {
                 let pod = pool.swap_remove(i);
-                self.expired.push((func, pod.idle_start, pod.warm_until));
+                self.expired.push(ExpiredPod {
+                    func,
+                    idle_start: pod.idle_start,
+                    warm_until: pod.warm_until,
+                    pending: pod.pending,
+                });
             } else {
                 i += 1;
             }
@@ -73,23 +94,35 @@ impl PodManager {
                 let pod = &mut pool[pi];
                 on_idle_span(pod.idle_start, t);
                 pod.busy_until = completion;
-                pod.pending = None;
-                (StartKind::Warm, pi)
+                (StartKind::Warm, pi, pod.pending.take())
             }
             None => {
                 pool.push(Pod::new_busy(completion));
-                (StartKind::Cold, pool.len() - 1)
+                (StartKind::Cold, pool.len() - 1, None)
             }
         }
     }
 
-    /// Apply a keep-alive decision for a pod completing at `completion`.
-    /// With `refresh = false` (static policies), the window armed at the
-    /// pod's first idle period is left untouched on reuse.
+    /// Apply a keep-alive decision for a pod completing at `completion`,
+    /// refreshing the window and recording the nearest-grid action as
+    /// pending. With out-of-grid timeouts prefer [`PodManager::retain_with`]
+    /// and pass the policy's own action index.
     pub fn retain(&mut self, func: u32, pod_idx: usize, completion: f64, keepalive_s: f64) {
-        self.retain_with(func, pod_idx, completion, keepalive_s, true)
+        let action = crate::KEEP_ALIVE_ACTIONS
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                (*a - keepalive_s).abs().total_cmp(&(*b - keepalive_s).abs())
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.retain_with(func, pod_idx, completion, keepalive_s, true, action)
     }
 
+    /// Apply a keep-alive decision. With `refresh = false` (static
+    /// policies), the window armed at the pod's first idle period is left
+    /// untouched on reuse. `action` is the decision's index into
+    /// [`crate::KEEP_ALIVE_ACTIONS`], armed as the pod's pending outcome.
     pub fn retain_with(
         &mut self,
         func: u32,
@@ -97,6 +130,7 @@ impl PodManager {
         completion: f64,
         keepalive_s: f64,
         refresh: bool,
+        action: usize,
     ) {
         let pod = &mut self.pools[func as usize][pod_idx];
         pod.busy_until = completion;
@@ -104,11 +138,11 @@ impl PodManager {
         if refresh || pod.warm_until == f64::INFINITY {
             pod.warm_until = completion + keepalive_s;
         }
+        pod.pending = Some(Pending { action, t: completion });
     }
 
-    /// Take the idle spans of pods that expired since the last call:
-    /// `(func, idle_start, warm_until)`.
-    pub fn drain_expired(&mut self) -> Vec<(u32, f64, f64)> {
+    /// Take the pods that expired since the last call.
+    pub fn drain_expired(&mut self) -> Vec<ExpiredPod> {
         std::mem::take(&mut self.expired)
     }
 
@@ -134,32 +168,43 @@ mod tests {
     fn cold_then_warm_then_expire() {
         let mut pm = PodManager::new(1);
         // Cold at t=0, completes at 1.
-        let (k, pi) = pm.acquire(0, 0.0, 1.0, |_, _| {});
+        let (k, pi, pending) = pm.acquire(0, 0.0, 1.0, |_, _| {});
         assert_eq!(k, StartKind::Cold);
+        assert!(pending.is_none());
         pm.retain(0, pi, 1.0, 10.0);
         assert_eq!(pm.warm_count(0, 5.0), 1);
 
-        // Warm reuse at t=5 closes idle span [1, 5].
+        // Warm reuse at t=5 closes idle span [1, 5] and yields the pending
+        // decision armed at completion 1 (10 s keep-alive = action 2).
         let mut spans = Vec::new();
-        let (k, pi) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
+        let (k, pi, pending) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
         assert_eq!(k, StartKind::Warm);
         assert_eq!(spans, vec![(1.0, 5.0)]);
+        assert_eq!(pending, Some(Pending { action: 2, t: 1.0 }));
         pm.retain(0, pi, 6.0, 10.0);
 
-        // t=100: expired, so cold again; expiry drained.
-        let (k, _) = pm.acquire(0, 100.0, 101.0, |_, _| {});
+        // t=100: expired, so cold again; expiry drained with its pending.
+        let (k, _, _) = pm.acquire(0, 100.0, 101.0, |_, _| {});
         assert_eq!(k, StartKind::Cold);
         let ex = pm.drain_expired();
-        assert_eq!(ex, vec![(0, 6.0, 16.0)]);
+        assert_eq!(
+            ex,
+            vec![ExpiredPod {
+                func: 0,
+                idle_start: 6.0,
+                warm_until: 16.0,
+                pending: Some(Pending { action: 2, t: 6.0 }),
+            }]
+        );
     }
 
     #[test]
     fn busy_pod_not_reusable() {
         let mut pm = PodManager::new(1);
-        let (_, pi) = pm.acquire(0, 0.0, 10.0, |_, _| {});
+        let (_, pi, _) = pm.acquire(0, 0.0, 10.0, |_, _| {});
         pm.retain(0, pi, 10.0, 60.0);
         // Arrival at t=5 while pod is busy until 10 -> cold.
-        let (k, _) = pm.acquire(0, 5.0, 6.0, |_, _| {});
+        let (k, _, _) = pm.acquire(0, 5.0, 6.0, |_, _| {});
         assert_eq!(k, StartKind::Cold);
         assert_eq!(pm.total_pods(), 2);
     }
@@ -167,22 +212,39 @@ mod tests {
     #[test]
     fn mru_selection() {
         let mut pm = PodManager::new(1);
-        let (_, p0) = pm.acquire(0, 0.0, 0.5, |_, _| {});
+        let (_, p0, _) = pm.acquire(0, 0.0, 0.5, |_, _| {});
         pm.retain(0, p0, 0.5, 60.0);
-        let (k1, p1) = pm.acquire(0, 0.2, 0.7, |_, _| {}); // overlaps -> cold
+        let (k1, p1, _) = pm.acquire(0, 0.2, 0.7, |_, _| {}); // overlaps -> cold
         assert_eq!(k1, StartKind::Cold);
         pm.retain(0, p1, 0.7, 60.0);
         // Next arrival should pick the more recently idle pod (idle 0.7).
         let mut spans = Vec::new();
-        let (k2, _) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
+        let (k2, _, _) = pm.acquire(0, 5.0, 6.0, |a, b| spans.push((a, b)));
         assert_eq!(k2, StartKind::Warm);
         assert_eq!(spans, vec![(0.7, 5.0)]);
     }
 
     #[test]
+    fn tied_expiries_both_drained_with_pendings() {
+        // Two pods with identical warm_until must both drain — attribution
+        // (charging exactly one) is the router's job; the pool must not
+        // lose either pending decision.
+        let mut pm = PodManager::new(1);
+        let (_, p0, _) = pm.acquire(0, 0.0, 0.1, |_, _| {});
+        let (_, p1, _) = pm.acquire(0, 0.0, 0.1, |_, _| {});
+        pm.retain_with(0, p0, 0.1, 1.0, true, 0);
+        pm.retain_with(0, p1, 0.1, 1.0, true, 0);
+        let (k, _, _) = pm.acquire(0, 100.0, 101.0, |_, _| {});
+        assert_eq!(k, StartKind::Cold);
+        let ex = pm.drain_expired();
+        assert_eq!(ex.len(), 2);
+        assert!(ex.iter().all(|x| x.warm_until == 1.1 && x.pending.is_some()));
+    }
+
+    #[test]
     fn grows_for_new_functions() {
         let mut pm = PodManager::new(1);
-        let (k, _) = pm.acquire(7, 0.0, 1.0, |_, _| {});
+        let (k, _, _) = pm.acquire(7, 0.0, 1.0, |_, _| {});
         assert_eq!(k, StartKind::Cold);
         assert_eq!(pm.warm_count(7, 0.0), 0);
     }

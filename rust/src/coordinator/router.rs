@@ -5,17 +5,34 @@
 //! outcome, and applies the policy's keep-alive decision. Timing of the
 //! *decision* itself is measured per request — the paper's §IV-E inference
 //! overhead, observed in situ.
+//!
+//! Realized decision outcomes are reported through
+//! [`KeepAlivePolicy::observe`] with the engine's exact semantics — a cold
+//! start is attributed to exactly one expired decision, ties on
+//! `warm_until` charging the last drained — so the online path is
+//! bit-identical to `simulator::engine` on the same trace + policy
+//! (property-tested in `rust/tests/property_lifecycle.rs`).
+//!
+//! When a [`crate::chaos::ChaosInjector`] is installed via
+//! [`RouterConfig::chaos`], the same injection points as the engine apply:
+//! spawn-failure backoff on cold starts, stale-carbon fallback at decision
+//! time, decision-timeout degradation to the static fallback action. With
+//! no injector, behavior is byte-identical to a build without the chaos
+//! subsystem (`rust/tests/property_chaos.rs`).
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::carbon::intensity::CarbonTrace;
-use crate::energy::model::EnergyModel;
+use crate::chaos::{ChaosCounters, ChaosInjector};
 use crate::coordinator::lifecycle::{PodManager, StartKind};
-use crate::policy::{DecisionContext, KeepAlivePolicy};
+use crate::energy::model::EnergyModel;
+use crate::policy::{DecisionContext, KeepAlivePolicy, Outcome};
 use crate::simulator::reuse::ReuseWindow;
 use crate::trace::model::FunctionProfile;
 use crate::util::stats::Running;
+use crate::KEEP_ALIVE_ACTIONS;
 
 /// One invocation submitted to the control plane. `t` is virtual workload
 /// time (seconds); the router is clock-agnostic so drivers can replay
@@ -46,6 +63,9 @@ pub struct RouterConfig {
     pub lambda_carbon: f64,
     pub network_latency_s: f64,
     pub reuse_window: usize,
+    /// Fault injector shared with the driver; `None` disables injection
+    /// entirely (byte-identical to the pre-chaos serve path).
+    pub chaos: Option<Arc<ChaosInjector>>,
 }
 
 impl Default for RouterConfig {
@@ -54,6 +74,7 @@ impl Default for RouterConfig {
             lambda_carbon: 0.5,
             network_latency_s: crate::NETWORK_LATENCY_S,
             reuse_window: crate::simulator::reuse::DEFAULT_WINDOW,
+            chaos: None,
         }
     }
 }
@@ -66,6 +87,11 @@ pub struct RouterMetrics {
     pub latency: Running,
     pub decision_ns: Running,
     pub keepalive_carbon_g: f64,
+    /// Degraded-mode event counts (all zero without an injector).
+    pub chaos: ChaosCounters,
+    /// Latest completion time seen (virtual s) — the horizon for
+    /// plan-derived accounting like carbon-outage fallback seconds.
+    pub t_end: f64,
 }
 
 /// The router. Single-owner state machine: wrap it in a thread with an
@@ -127,48 +153,144 @@ impl<P: KeepAlivePolicy> Router<P> {
             self.windows[f].push((req.t - self.last_completion[f]).max(0.0));
         }
 
+        // Spawn-failure query: stateless, so it can run before warm/cold
+        // is known; the result only applies when the start is cold.
+        let (retry_delay, retries) = match self.cfg.chaos.as_deref() {
+            Some(ch) => ch.spawn_delay(req.func, req.t),
+            None => (0.0, 0),
+        };
+
         // Serve (idle spans closed by reuse are carbon-accounted here).
-        let mut idle_carbon = 0.0;
         let ci = &self.ci;
         let energy_per_kwh = crate::energy::JOULES_PER_KWH;
-        let cold_first_guess = req.t + prof.cold_start_s + req.exec_s;
-        let (kind, pod_idx) = self.pods.acquire(req.func, req.t, cold_first_guess, |a, b| {
-            idle_carbon += idle_w * ci.integrate(a, b) / energy_per_kwh;
-        });
+        let cold_first_guess = if retries > 0 {
+            req.t + prof.cold_start_s + retry_delay + req.exec_s
+        } else {
+            req.t + prof.cold_start_s + req.exec_s
+        };
+        let mut reuse: Option<(f64, f64)> = None; // (idle_start, idle carbon)
+        let (kind, pod_idx, reused_pending) =
+            self.pods.acquire(req.func, req.t, cold_first_guess, |a, b| {
+                reuse = Some((a, idle_w * ci.integrate(a, b) / energy_per_kwh));
+            });
+        let mut idle_carbon = reuse.map_or(0.0, |(_, g)| g);
         // Expired pods accrue their full idle span.
-        for (xf, a, b) in self.pods.drain_expired() {
-            let xprof = &self.functions[xf as usize];
+        let drained = self.pods.drain_expired();
+        for x in &drained {
+            let xprof = &self.functions[x.func as usize];
             let xw = self.energy.lambda_idle
                 * self.energy.active_power_w(xprof.mem_mb, xprof.cpu_cores);
-            idle_carbon += xw * ci.integrate(a, b) / energy_per_kwh;
+            idle_carbon += xw * ci.integrate(x.idle_start, x.warm_until) / energy_per_kwh;
         }
         self.metrics.keepalive_carbon_g += idle_carbon;
 
         let (cold, cold_lat) = match kind {
             StartKind::Warm => (false, 0.0),
-            StartKind::Cold => (true, prof.cold_start_s),
+            StartKind::Cold => {
+                if retries > 0 {
+                    self.metrics.chaos.spawn_retries += u64::from(retries);
+                    self.metrics.chaos.retry_delay_s += retry_delay;
+                    (true, prof.cold_start_s + retry_delay)
+                } else {
+                    (true, prof.cold_start_s)
+                }
+            }
         };
         let completion = req.t + cold_lat + req.exec_s;
 
-        // Keep-alive decision (timed — this is the §IV-E overhead).
+        // Resolve policy outcomes with the engine's semantics: the reused
+        // pod's decision first, then this arrival's expiries. A cold start
+        // charges exactly one expired decision — the most recent expiry,
+        // ties on `warm_until` going to the last drained.
+        if let Some(p) = reused_pending {
+            let (idle_start, g) = reuse.unwrap_or((req.t, 0.0));
+            self.policy.observe(&Outcome {
+                func: req.func,
+                action: p.action,
+                t: p.t,
+                resolved_t: req.t,
+                reused: true,
+                idle_span_s: req.t - idle_start,
+                idle_carbon_g: g,
+                cold_penalty_s: 0.0,
+                done: false,
+            });
+        }
+        if !drained.is_empty() {
+            let mut charged = usize::MAX;
+            if cold {
+                let mut best = f64::NEG_INFINITY;
+                for (ei, x) in drained.iter().enumerate() {
+                    if x.pending.is_some() && x.warm_until >= best {
+                        best = x.warm_until;
+                        charged = ei;
+                    }
+                }
+            }
+            for (ei, x) in drained.iter().enumerate() {
+                let Some(p) = x.pending else { continue };
+                let xprof = &self.functions[x.func as usize];
+                let xw = self.energy.lambda_idle
+                    * self.energy.active_power_w(xprof.mem_mb, xprof.cpu_cores);
+                let g = xw * ci.integrate(x.idle_start, x.warm_until) / energy_per_kwh;
+                let penalty = if ei == charged { cold_lat } else { 0.0 };
+                self.policy.observe(&Outcome {
+                    func: x.func,
+                    action: p.action,
+                    t: p.t,
+                    resolved_t: req.t,
+                    reused: false,
+                    idle_span_s: (x.warm_until - x.idle_start).max(0.0),
+                    idle_carbon_g: g,
+                    cold_penalty_s: penalty,
+                    done: false,
+                });
+            }
+        }
+
+        // Keep-alive decision (timed — this is the §IV-E overhead). During
+        // a carbon-feed outage the decision sees the stale-fallback
+        // estimate; accounting above always uses the true trace.
+        let ci_now = match self.cfg.chaos.as_deref() {
+            Some(ch) => match ch.stale_since(completion) {
+                Some(outage_start) => {
+                    self.metrics.chaos.stale_ci_decisions += 1;
+                    ch.fallback_ci(&self.ci, completion, outage_start)
+                }
+                None => self.ci.at(completion),
+            },
+            None => self.ci.at(completion),
+        };
         let ctx = DecisionContext {
             t: completion,
             func: prof,
-            ci: self.ci.at(completion),
+            ci: ci_now,
             reuse_probs: self.windows[f].probs(),
             lambda_carbon: self.cfg.lambda_carbon,
             idle_power_w: idle_w,
             next_arrival_gap: None,
         };
         let t0 = Instant::now();
-        let (_action, keepalive_s) = self.policy.decide_seconds(&ctx);
+        let (action, keepalive_s) = self.policy.decide_seconds(&ctx);
         let decision_ns = t0.elapsed().as_nanos() as u64;
+        // A decision slower than the recovery timeout is discarded: the
+        // static fallback keep-alive applies (the policy still ran, so
+        // stateful policies stay consistent with the simulated stack).
+        let (action, keepalive_s) = match self.cfg.chaos.as_deref() {
+            Some(ch) if ch.decision_degraded(completion) => {
+                self.metrics.chaos.degraded_decisions += 1;
+                let a = ch.recovery().fallback_action.min(KEEP_ALIVE_ACTIONS.len() - 1);
+                (a, KEEP_ALIVE_ACTIONS[a])
+            }
+            _ => (action.min(KEEP_ALIVE_ACTIONS.len() - 1), keepalive_s),
+        };
         self.pods.retain_with(
             req.func,
             pod_idx,
             completion,
             keepalive_s,
             self.policy.refreshes_timer(),
+            action,
         );
         self.last_completion[f] = completion;
 
@@ -179,6 +301,9 @@ impl<P: KeepAlivePolicy> Router<P> {
         }
         self.metrics.latency.add(latency_s);
         self.metrics.decision_ns.add(decision_ns as f64);
+        if completion > self.metrics.t_end {
+            self.metrics.t_end = completion;
+        }
 
         InvocationResponse { id: req.id, cold, latency_s, keepalive_s, decision_ns }
     }
@@ -239,6 +364,7 @@ mod tests {
         assert_eq!(r.metrics.cold_starts, 1);
         assert_eq!(r.metrics.requests, 2);
         assert!(r.metrics.keepalive_carbon_g > 0.0);
+        assert!(!r.metrics.chaos.any());
     }
 
     #[test]
@@ -255,6 +381,45 @@ mod tests {
         let a = r.handle(&InvocationRequest { id: 1, t: 0.0, func: 0, exec_s: 0.1 });
         // Sub-millisecond for a fixed policy.
         assert!(a.decision_ns < 1_000_000);
+    }
+
+    #[test]
+    fn tied_expiries_charge_exactly_one_cold_start() {
+        // Mirror of the engine regression: two pods with tied warm_until
+        // both expire before a cold arrival; exactly one of their decisions
+        // takes the cold penalty (the online path used to have no outcome
+        // attribution at all, and a naive port double-charged ties).
+        struct Cap(Vec<Outcome>);
+        impl KeepAlivePolicy for Cap {
+            fn name(&self) -> &str {
+                "cap"
+            }
+            fn decide(&mut self, _: &DecisionContext) -> usize {
+                0 // always 1s keep-alive
+            }
+            fn observe(&mut self, o: &Outcome) {
+                self.0.push(*o);
+            }
+        }
+        let mut prof = profile(0);
+        prof.cold_start_s = 3.0;
+        let mut r = Router::new(
+            vec![prof],
+            Cap(Vec::new()),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            RouterConfig::default(),
+        );
+        for (id, t) in [(1u64, 0.0), (2, 0.0), (3, 100.0)] {
+            r.handle(&InvocationRequest { id, t, func: 0, exec_s: 0.1 });
+        }
+        let (cap, _) = r.into_parts();
+        let expired: Vec<&Outcome> = cap.0.iter().filter(|o| !o.reused).collect();
+        assert_eq!(expired.len(), 2);
+        let charged: Vec<&&Outcome> =
+            expired.iter().filter(|o| o.cold_penalty_s > 0.0).collect();
+        assert_eq!(charged.len(), 1, "exactly one tied expiry takes the penalty");
+        assert!((charged[0].cold_penalty_s - 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -276,5 +441,36 @@ mod tests {
         assert!(resps.iter().skip(1).all(|r| !r.cold));
         let r = handle.join().unwrap();
         assert_eq!(r.metrics.requests, 10);
+    }
+
+    #[test]
+    fn spawn_failure_window_delays_cold_starts() {
+        use crate::chaos::{ChaosInjector, Fault, FaultPlan, RecoveryConfig};
+        let plan = FaultPlan {
+            seed: 11,
+            faults: vec![Fault::SpawnFailure { from_s: 0.0, until_s: 50.0, p: 1.0 }],
+            recovery: RecoveryConfig::default(),
+        };
+        let cfg = RouterConfig {
+            chaos: Some(Arc::new(ChaosInjector::new(plan))),
+            ..Default::default()
+        };
+        let mut r = Router::new(
+            vec![profile(0)],
+            FixedTimeout::huawei(),
+            CarbonTrace::constant(300.0),
+            EnergyModel::default(),
+            cfg,
+        );
+        let a = r.handle(&InvocationRequest { id: 1, t: 0.0, func: 0, exec_s: 0.1 });
+        assert!(a.cold);
+        // p = 1.0 exhausts the retry budget; latency carries the backoff.
+        let rc = RecoveryConfig::default();
+        assert_eq!(r.metrics.chaos.spawn_retries, u64::from(rc.max_spawn_retries));
+        assert!(a.latency_s > 0.4 + 0.1 + crate::NETWORK_LATENCY_S);
+        // Warm arrival inside the window pays nothing.
+        let b = r.handle(&InvocationRequest { id: 2, t: 10.0, func: 0, exec_s: 0.1 });
+        assert!(!b.cold);
+        assert_eq!(r.metrics.chaos.spawn_retries, u64::from(rc.max_spawn_retries));
     }
 }

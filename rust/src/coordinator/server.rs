@@ -11,7 +11,8 @@ use std::sync::mpsc::{channel, sync_channel};
 use std::time::Instant;
 
 use crate::carbon::intensity::CarbonTrace;
-use crate::coordinator::driver::{spawn_driver, Pace};
+use crate::chaos::ChaosReport;
+use crate::coordinator::driver::{spawn_driver_chaos, Pace};
 use crate::coordinator::router::{Router, RouterConfig, RouterMetrics};
 use crate::energy::model::EnergyModel;
 use crate::policy::KeepAlivePolicy;
@@ -29,6 +30,9 @@ pub struct ServeReport {
     pub mean_decision_us: f64,
     pub p99_decision_us: f64,
     pub keepalive_carbon_g: f64,
+    /// Degraded-mode accounting; `Some` iff a fault injector was attached
+    /// (zeros under an empty plan).
+    pub chaos: Option<ChaosReport>,
 }
 
 impl ServeReport {
@@ -42,6 +46,7 @@ impl ServeReport {
             mean_decision_us: m.decision_ns.mean() / 1_000.0,
             p99_decision_us,
             keepalive_carbon_g: m.keepalive_carbon_g,
+            chaos: None,
         }
     }
 
@@ -58,6 +63,9 @@ impl ServeReport {
             self.p99_decision_us,
             self.keepalive_carbon_g,
         );
+        if let Some(ch) = &self.chaos {
+            println!("{}", ch.summary_line());
+        }
     }
 }
 
@@ -78,12 +86,13 @@ impl CoordinatorServer {
         queue_depth: usize,
     ) -> anyhow::Result<(ServeReport, P)> {
         let _serve_span = crate::obs::span("coordinator/serve");
+        let chaos = cfg.chaos.clone();
         let router = Router::new(trace.functions.clone(), policy, ci, energy, cfg);
         let (req_tx, req_rx) = sync_channel(queue_depth);
         let (resp_tx, resp_rx) = channel();
 
         let t0 = Instant::now();
-        let driver = spawn_driver(trace, pace, req_tx);
+        let driver = spawn_driver_chaos(trace, pace, req_tx, chaos.clone());
         let router_thread = std::thread::spawn(move || router.serve(req_rx, resp_tx));
 
         // Collect responses on this thread (keeps decision-latency samples).
@@ -120,7 +129,10 @@ impl CoordinatorServer {
             Ecdf::new(decision_us).quantile(0.99)
         };
         let (policy, metrics) = router.into_parts();
-        let report = ServeReport::from_metrics(&metrics, wall, p99);
+        let mut report = ServeReport::from_metrics(&metrics, wall, p99);
+        report.chaos = chaos.as_deref().map(|inj| {
+            ChaosReport::new(metrics.chaos, inj.stalls_hit(), inj.plan(), metrics.t_end)
+        });
         if let Some(sink) = crate::obs::sink() {
             use crate::util::json::Json;
             sink.add_counter("serve/requests", report.requests);
@@ -145,6 +157,12 @@ impl CoordinatorServer {
             ];
             if let Some(h) = &decision_hist {
                 lines.push(h.to_json("decision_s"));
+            }
+            if let Some(ch) = &report.chaos {
+                lines.push(Json::obj(vec![
+                    ("kind", "chaos".into()),
+                    ("report", ch.to_json()),
+                ]));
             }
             let stream = format!("serve_{}", policy.name());
             if let Err(e) = sink.emit_jsonl(&stream, &lines) {

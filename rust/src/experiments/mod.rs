@@ -13,16 +13,18 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig5_7;
 pub mod fig8_9;
+pub mod resilience;
 pub mod table2;
 pub mod table3;
 pub mod workload;
 
 use anyhow::Result;
 
-/// All experiment ids in paper order (plus the ablation suite).
-pub const ALL: [&str; 13] = [
+/// All experiment ids in paper order (plus the ablation and resilience
+/// suites).
+pub const ALL: [&str; 14] = [
     "fig1", "fig2", "fig3", "table2", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "table3", "cost", "fig10", "ablation",
+    "table3", "cost", "fig10", "ablation", "resilience",
 ];
 
 /// Dispatch an experiment by id. `seed` pins the synthetic workload;
@@ -52,13 +54,14 @@ fn dispatch(id: &str, seed: u64, quick: bool) -> Result<()> {
         "cost" => cost::run(seed, quick),
         "fig10" | "fig10a" | "fig10b" => fig10::run(seed, quick),
         "ablation" => ablation::run(seed, quick),
+        "resilience" => resilience::run(seed, quick),
         "all" => {
             // Per-experiment + total wall-clock: the number EXPERIMENTS.md
             // §Perf tracks across optimization iterations.
             let t_all = std::time::Instant::now();
             for e in [
                 "fig1", "fig2", "fig3", "table2", "fig5", "fig8", "table3", "cost",
-                "fig10", "ablation",
+                "fig10", "ablation", "resilience",
             ] {
                 println!("\n================ experiment {e} ================");
                 let t0 = std::time::Instant::now();

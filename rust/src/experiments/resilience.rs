@@ -1,0 +1,150 @@
+//! Resilience experiment — degraded-mode behavior under fault injection.
+//!
+//! Sweeps fault intensity × policy over the General workload using the
+//! canned [`FaultPlan`] (spawn-failure, carbon-outage, decision-delay, and
+//! a driver stall scaled by intensity; see DESIGN.md §10) and reports how
+//! much each policy's latency and carbon degrade relative to its own
+//! fault-free baseline, alongside the raw degraded-mode counters.
+//!
+//! Same plan + seed ⇒ bit-identical rows (the chaos determinism invariant,
+//! property-tested in `rust/tests/property_chaos.rs`); intensity 0.0 is an
+//! empty plan and reproduces the fault-free run exactly.
+
+use std::sync::Arc;
+
+use crate::chaos::{ChaosInjector, FaultPlan};
+use crate::experiments::{results_dir, workload};
+use crate::policy::{CarbonMin, FixedTimeout, LatencyMin};
+use crate::simulator::engine::SimConfig;
+use crate::simulator::metrics::SimMetrics;
+use crate::simulator::parallel::{BoxedPolicy, SweepCell, SweepRunner};
+use crate::util::csv::Writer;
+
+/// Canned-plan fault intensities swept (0 = fault-free baseline).
+pub const INTENSITIES: [f64; 3] = [0.0, 0.5, 1.0];
+
+pub fn run(seed: u64, quick: bool) -> anyhow::Result<()> {
+    let w = workload::build(seed, quick);
+    let t0 = w.general.invocations.first().map(|i| i.t).unwrap_or(0.0);
+    let t1 = w.general.invocations.last().map(|i| i.t).unwrap_or(t0);
+    println!(
+        "Resilience: {} invocations over [{t0:.0}s, {t1:.0}s], fault intensities {INTENSITIES:?}",
+        w.general.len(),
+    );
+
+    let params = workload::lace_rl_params()?;
+    let mut cells = Vec::new();
+    for &x in &INTENSITIES {
+        let plan = FaultPlan::canned(seed, t0, t1, x);
+        let cfg = SimConfig {
+            chaos: Some(Arc::new(ChaosInjector::new(plan))),
+            ..SimConfig::default()
+        };
+        cells.push(SweepCell::new(format!("huawei-60s@{x:.1}"), cfg.clone(), || {
+            Box::new(FixedTimeout::huawei()) as BoxedPolicy
+        }));
+        cells.push(SweepCell::new(format!("latency-min@{x:.1}"), cfg.clone(), || {
+            Box::new(LatencyMin) as BoxedPolicy
+        }));
+        cells.push(SweepCell::new(format!("carbon-min@{x:.1}"), cfg.clone(), || {
+            Box::new(CarbonMin) as BoxedPolicy
+        }));
+        let p = params.clone();
+        cells.push(SweepCell::new(format!("lace-rl@{x:.1}"), cfg, move || {
+            Box::new(workload::lace_rl_from_params(&p)) as BoxedPolicy
+        }));
+    }
+
+    let runner = SweepRunner::new(&w.general, &w.ci, w.energy.clone());
+    let outcomes = runner.run(cells);
+
+    // Baseline (intensity 0.0) metrics per policy for the delta columns.
+    let baseline = |policy: &str| -> Option<&SimMetrics> {
+        let want = format!("{policy}@0.0");
+        outcomes.iter().find(|o| o.label == want).map(|o| &o.result.metrics)
+    };
+
+    let dir = results_dir();
+    let f = std::fs::File::create(dir.join("resilience.csv"))?;
+    let mut csv = Writer::new(
+        std::io::BufWriter::new(f),
+        &[
+            "policy",
+            "intensity",
+            "cold_starts",
+            "avg_latency_s",
+            "total_carbon_g",
+            "latency_delta_pct",
+            "carbon_delta_pct",
+            "spawn_retries",
+            "retry_delay_s",
+            "stale_ci_decisions",
+            "degraded_decisions",
+        ],
+    )?;
+
+    println!(
+        "\n{:<22} {:>8} {:>10} {:>10} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "cell", "cold", "latency", "carbon", "Δlat%", "Δcarb%", "retries", "stale", "degr"
+    );
+    for o in &outcomes {
+        let (policy, intensity) = o
+            .label
+            .rsplit_once('@')
+            .ok_or_else(|| anyhow::anyhow!("bad cell label '{}'", o.label))?;
+        let m = &o.result.metrics;
+        let (dlat, dcarb) = match baseline(policy) {
+            Some(b) if b.avg_latency_s() > 0.0 && b.total_carbon_g() > 0.0 => (
+                100.0 * (m.avg_latency_s() / b.avg_latency_s() - 1.0),
+                100.0 * (m.total_carbon_g() / b.total_carbon_g() - 1.0),
+            ),
+            _ => (0.0, 0.0),
+        };
+        println!(
+            "{:<22} {:>8} {:>10.4} {:>10.3} {:>8.2}% {:>8.2}% {:>8} {:>8} {:>8}",
+            o.label,
+            m.cold_starts,
+            m.avg_latency_s(),
+            m.total_carbon_g(),
+            dlat,
+            dcarb,
+            m.chaos.spawn_retries,
+            m.chaos.stale_ci_decisions,
+            m.chaos.degraded_decisions,
+        );
+        csv.row(&[
+            policy.to_string(),
+            intensity.to_string(),
+            m.cold_starts.to_string(),
+            format!("{:.6}", m.avg_latency_s()),
+            format!("{:.6}", m.total_carbon_g()),
+            format!("{dlat:.3}"),
+            format!("{dcarb:.3}"),
+            m.chaos.spawn_retries.to_string(),
+            format!("{:.4}", m.chaos.retry_delay_s),
+            m.chaos.stale_ci_decisions.to_string(),
+            m.chaos.degraded_decisions.to_string(),
+        ])?;
+    }
+
+    // Sanity anchors: empty plans inject nothing; full intensity injects
+    // spawn retries on every policy (the window covers 40% of the trace).
+    for o in &outcomes {
+        if o.label.ends_with("@0.0") {
+            anyhow::ensure!(
+                !o.result.metrics.chaos.any(),
+                "intensity 0 cell '{}' recorded chaos events",
+                o.label
+            );
+        }
+        if o.label.ends_with("@1.0") {
+            anyhow::ensure!(
+                o.result.metrics.chaos.any(),
+                "intensity 1 cell '{}' recorded no chaos events",
+                o.label
+            );
+        }
+    }
+    println!("\nwrote {}", dir.join("resilience.csv").display());
+    Ok(())
+}

@@ -34,8 +34,10 @@
 //! | [`experiments`] | one harness per paper figure/table |
 //! | [`metrics`] | composite metrics (LCP, IRI) and report formatting |
 //! | [`obs`] | structured telemetry: counters, histograms, spans, JSONL export (no-op until a sink is installed) |
+//! | [`chaos`] | deterministic fault injection + recovery: seeded `FaultPlan` DSL, injection hooks in both stacks, degraded-mode accounting |
 
 pub mod carbon;
+pub mod chaos;
 pub mod coordinator;
 pub mod energy;
 pub mod experiments;

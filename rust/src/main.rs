@@ -4,13 +4,18 @@
 //! lace-rl gen-trace   [--out trace.csv] [--seed 7] [--functions 400] ...
 //! lace-rl train       [--episodes 30] [--lambda 0.5] [--quick]
 //! lace-rl simulate    [--policy lace-rl|huawei|latency-min|carbon-min|dpso|oracle]
-//! lace-rl experiment  <fig1|fig2|fig3|table2|fig5|fig6|fig7|fig8|fig9|table3|cost|fig10|all>
+//! lace-rl experiment  <fig1|fig2|fig3|table2|fig5|fig6|fig7|fig8|fig9|table3|cost|fig10|ablation|resilience|all>
 //! lace-rl serve       [--policy ...] [--speedup 0] — online coordinator replay
+//! lace-rl chaos       [--intensity 1.0] [--plan FILE] — serve under fault injection
 //! lace-rl selftest    — PJRT artifact round-trip check
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::Result;
+use lace_rl::chaos::{ChaosInjector, FaultPlan};
 use lace_rl::coordinator::driver::Pace;
+use lace_rl::coordinator::server::ServeReport;
 use lace_rl::coordinator::{CoordinatorServer, RouterConfig};
 use lace_rl::experiments::{self, workload};
 use lace_rl::policy::dpso::DpsoConfig;
@@ -32,6 +37,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("selftest") => cmd_selftest(&args),
         _ => {
             print_usage();
@@ -56,6 +62,8 @@ fn print_usage() {
            simulate     run one policy over the test workload\n\
            experiment   regenerate a paper figure/table (or 'all')\n\
            serve        replay the workload through the online coordinator\n\
+           chaos        serve under a fault plan and report degraded-mode accounting\n\
+                        (--intensity X canned plan, or --plan FILE; --save-plan FILE)\n\
            selftest     verify the PJRT artifact round trip\n\
          \n\
          COMMON OPTIONS:\n\
@@ -183,18 +191,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     experiments::run(id, seed_of(args), args.flag("quick"))
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let w = workload::build(seed_of(args), args.flag("quick"));
-    let name = args.str_or("policy", "lace-rl");
-    let speedup = args.f64_or("speedup", 0.0);
-    let pace = if speedup > 0.0 { Pace::RealTime { speedup } } else { Pace::MaxSpeed };
-    let cfg = RouterConfig {
-        lambda_carbon: args.f64_or("lambda", 0.5),
-        ..RouterConfig::default()
-    };
-    // The server is generic over the policy type; route through the
-    // concrete types (trait objects are not Send+'static-friendly here).
-    let report = match name {
+/// Replay the General workload through the coordinator with the named
+/// policy. The server is generic over the policy type; route through the
+/// concrete types (trait objects are not Send+'static-friendly here).
+fn serve_with(
+    name: &str,
+    w: &workload::Workload,
+    cfg: RouterConfig,
+    pace: Pace,
+) -> Result<ServeReport> {
+    Ok(match name {
         "huawei" => {
             CoordinatorServer::run(&w.general, FixedTimeout::huawei(), w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
         }
@@ -211,7 +217,57 @@ fn cmd_serve(args: &Args) -> Result<()> {
             CoordinatorServer::run(&w.general, workload::lace_rl_policy()?, w.ci.clone(), w.energy.clone(), cfg, pace, 1024)?.0
         }
         other => anyhow::bail!("unknown policy '{other}' for serve"),
+    })
+}
+
+fn pace_of(args: &Args) -> Pace {
+    let speedup = args.f64_or("speedup", 0.0);
+    if speedup > 0.0 { Pace::RealTime { speedup } } else { Pace::MaxSpeed }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let w = workload::build(seed_of(args), args.flag("quick"));
+    let name = args.str_or("policy", "lace-rl");
+    let cfg = RouterConfig {
+        lambda_carbon: args.f64_or("lambda", 0.5),
+        ..RouterConfig::default()
     };
+    let report = serve_with(name, &w, cfg, pace_of(args))?;
+    report.print(name);
+    print_obs_summary();
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let seed = seed_of(args);
+    let w = workload::build(seed, args.flag("quick"));
+    let name = args.str_or("policy", "huawei");
+    let plan = match args.opt("plan") {
+        Some(path) => FaultPlan::load(path)?,
+        None => {
+            // Anchor the canned plan to the actual replay span so the
+            // fault windows overlap the traffic regardless of --quick.
+            let t0 = w.general.invocations.first().map(|i| i.t).unwrap_or(0.0);
+            let t1 = w.general.invocations.last().map(|i| i.t).unwrap_or(t0);
+            FaultPlan::canned(seed, t0, t1, args.f64_or("intensity", 1.0))
+        }
+    };
+    if let Some(path) = args.opt("save-plan") {
+        plan.save(path)?;
+        println!("wrote fault plan to {path}");
+    }
+    println!(
+        "fault plan: seed={} faults={} ({})",
+        plan.seed,
+        plan.faults.len(),
+        if plan.is_empty() { "empty — fault-free replay" } else { "active" },
+    );
+    let cfg = RouterConfig {
+        lambda_carbon: args.f64_or("lambda", 0.5),
+        chaos: Some(Arc::new(ChaosInjector::new(plan))),
+        ..RouterConfig::default()
+    };
+    let report = serve_with(name, &w, cfg, pace_of(args))?;
     report.print(name);
     print_obs_summary();
     Ok(())

@@ -57,6 +57,16 @@ pub struct FuncObs {
     pub cold_hist: Hist,
     /// Idle carbon per expiry (g).
     pub expiry_hist: Hist,
+    /// Pod-spawn retries under fault injection (`chaos`).
+    pub spawn_retries: u64,
+    /// Total spawn-retry backoff delay (s) under fault injection.
+    pub retry_delay_s: f64,
+    /// Decisions degraded to the static fallback action (chaos timeout).
+    pub degraded_decisions: u64,
+    /// Decisions taken on stale-carbon fallback estimates (chaos outage).
+    pub stale_ci_decisions: u64,
+    /// Per-cold-start retry backoff delays (s) under fault injection.
+    pub retry_hist: Hist,
     /// Time-bucketed series, sorted by bucket index.
     buckets: Vec<BucketCell>,
 }
@@ -73,6 +83,11 @@ impl FuncObs {
             keep_hist: Hist::new(),
             cold_hist: Hist::new(),
             expiry_hist: Hist::new(),
+            spawn_retries: 0,
+            retry_delay_s: 0.0,
+            degraded_decisions: 0,
+            stale_ci_decisions: 0,
+            retry_hist: Hist::new(),
             buckets: Vec::new(),
         }
     }
@@ -126,6 +141,20 @@ impl FuncObs {
         self.cell(horizon).idle_carbon_g += idle_carbon_g;
     }
 
+    pub(crate) fn on_spawn_retry(&mut self, retries: u64, delay_s: f64) {
+        self.spawn_retries += retries;
+        self.retry_delay_s += delay_s;
+        self.retry_hist.record(delay_s);
+    }
+
+    pub(crate) fn on_degraded(&mut self) {
+        self.degraded_decisions += 1;
+    }
+
+    pub(crate) fn on_stale(&mut self) {
+        self.stale_ci_decisions += 1;
+    }
+
     /// Fold `other` into `self`. Scalars and histograms add; the bucket
     /// series merge by bucket index (both inputs are sorted).
     fn merge(&mut self, other: &FuncObs) {
@@ -138,6 +167,11 @@ impl FuncObs {
         self.keep_hist.merge(&other.keep_hist);
         self.cold_hist.merge(&other.cold_hist);
         self.expiry_hist.merge(&other.expiry_hist);
+        self.spawn_retries += other.spawn_retries;
+        self.retry_delay_s += other.retry_delay_s;
+        self.degraded_decisions += other.degraded_decisions;
+        self.stale_ci_decisions += other.stale_ci_decisions;
+        self.retry_hist.merge(&other.retry_hist);
         let mut merged = Vec::with_capacity(self.buckets.len() + other.buckets.len());
         let (mut i, mut j) = (0, 0);
         while i < self.buckets.len() && j < other.buckets.len() {
@@ -236,7 +270,7 @@ impl SimObs {
         let mut lines = Vec::with_capacity(self.funcs.len() + t.buckets.len() + 6);
         lines.push(Json::obj(vec![
             ("kind", "meta".into()),
-            ("schema", 1u64.into()),
+            ("schema", 2u64.into()),
             ("stream", label.into()),
             ("bucket_s", Json::Num(self.bucket_s)),
             ("functions", (self.funcs.len() as u64).into()),
@@ -249,6 +283,10 @@ impl SimObs {
             ("cold_latency_s", Json::Num(t.cold_latency_s)),
             ("idle_carbon_g", Json::Num(t.idle_carbon_g)),
             ("expiry_carbon_g", Json::Num(t.expiry_carbon_g)),
+            ("spawn_retries", t.spawn_retries.into()),
+            ("retry_delay_s", Json::Num(t.retry_delay_s)),
+            ("degraded_decisions", t.degraded_decisions.into()),
+            ("stale_ci_decisions", t.stale_ci_decisions.into()),
         ]));
         for (id, fo) in &self.funcs {
             let series = fo
@@ -281,6 +319,7 @@ impl SimObs {
         lines.push(t.keep_hist.to_json("keepalive_s"));
         lines.push(t.cold_hist.to_json("cold_start_s"));
         lines.push(t.expiry_hist.to_json("idle_carbon_per_expiry_g"));
+        lines.push(t.retry_hist.to_json("retry_delay_s"));
         lines
     }
 }

@@ -66,6 +66,11 @@ pub struct SimConfig {
     /// (`obs::install_jsonl`); collecting changes no simulation output bit
     /// (property-tested in `rust/tests/property_obs.rs`).
     pub collect_obs: bool,
+    /// Fault injector; `None` (the default) is byte-identical to a build
+    /// without the chaos subsystem (`rust/tests/property_chaos.rs`). The
+    /// injector is stateless per event, so sharded runs stay bit-identical
+    /// to sequential ones under any plan.
+    pub chaos: Option<std::sync::Arc<crate::chaos::ChaosInjector>>,
 }
 
 impl Default for SimConfig {
@@ -77,6 +82,7 @@ impl Default for SimConfig {
             track_latencies: false,
             provide_oracle_gap: false,
             collect_obs: false,
+            chaos: None,
         }
     }
 }
@@ -271,13 +277,28 @@ impl<'a> ShardPass<'a> {
                 (false, 0.0, pi)
             }
             None => {
-                // Cold start.
-                let cold_lat = prof.cold_start_s;
+                // Cold start. Inside a spawn-failure window the boot is
+                // preceded by the recovery policy's retry backoff; the boot
+                // itself (and its carbon) is unchanged, just shifted.
+                let (retry_delay, retries) = match self.cfg.chaos.as_deref() {
+                    Some(ch) => ch.spawn_delay(inv.func, t),
+                    None => (0.0, 0),
+                };
+                let (cold_lat, boot_t) = if retries > 0 {
+                    st.metrics.chaos.spawn_retries += u64::from(retries);
+                    st.metrics.chaos.retry_delay_s += retry_delay;
+                    if let Some(o) = self.obs.as_mut() {
+                        o.func(f).on_spawn_retry(u64::from(retries), retry_delay);
+                    }
+                    (prof.cold_start_s + retry_delay, t + retry_delay)
+                } else {
+                    (prof.cold_start_s, t)
+                };
                 st.metrics.cold_carbon_g += self.energy.cold_carbon_g(
                     prof.mem_mb,
                     prof.cpu_cores,
-                    t,
-                    cold_lat,
+                    boot_t,
+                    prof.cold_start_s,
                     self.ci,
                 );
                 st.pods.push(Pod::new_busy(t + cold_lat + inv.exec_s));
@@ -347,10 +368,26 @@ impl<'a> ShardPass<'a> {
         } else {
             None
         };
+        // During a carbon-feed outage the decision sees the stale-fallback
+        // estimate (last known value extrapolated along the diurnal prior);
+        // carbon *accounting* above always reads the true trace.
+        let ci_now = match self.cfg.chaos.as_deref() {
+            Some(ch) => match ch.stale_since(completion) {
+                Some(outage_start) => {
+                    st.metrics.chaos.stale_ci_decisions += 1;
+                    if let Some(o) = self.obs.as_mut() {
+                        o.func(f).on_stale();
+                    }
+                    ch.fallback_ci(self.ci, completion, outage_start)
+                }
+                None => self.ci.at(completion),
+            },
+            None => self.ci.at(completion),
+        };
         let ctx = DecisionContext {
             t: completion,
             func: prof,
-            ci: self.ci.at(completion),
+            ci: ci_now,
             reuse_probs: st.window.probs(),
             lambda_carbon: self.cfg.lambda_carbon,
             idle_power_w: idle_w,
@@ -359,6 +396,21 @@ impl<'a> ShardPass<'a> {
         let (action, keep_s) = {
             let (a, k) = policy.decide_seconds(&ctx);
             (a.min(KEEP_ALIVE_ACTIONS.len() - 1), k)
+        };
+        // A decision slower than the recovery timeout is discarded in favor
+        // of the static fallback keep-alive. The policy still runs (its
+        // internal state must match an undegraded replay); only the applied
+        // action changes.
+        let (action, keep_s) = match self.cfg.chaos.as_deref() {
+            Some(ch) if ch.decision_degraded(completion) => {
+                st.metrics.chaos.degraded_decisions += 1;
+                if let Some(o) = self.obs.as_mut() {
+                    o.func(f).on_degraded();
+                }
+                let a = ch.recovery().fallback_action.min(KEEP_ALIVE_ACTIONS.len() - 1);
+                (a, KEEP_ALIVE_ACTIONS[a])
+            }
+            _ => (action, keep_s),
         };
         if let Some(o) = self.obs.as_mut() {
             o.func(f).on_decision(keep_s);

@@ -23,6 +23,9 @@ pub struct SimMetrics {
     pub idle_pod_seconds: f64,
     /// Total wasted idle pod-seconds (idle periods that ended in expiry).
     pub wasted_idle_seconds: f64,
+    /// Degraded-mode event counts under fault injection (all zero without
+    /// an injector — `SimConfig::chaos`).
+    pub chaos: crate::chaos::ChaosCounters,
 }
 
 impl SimMetrics {
@@ -47,6 +50,7 @@ impl SimMetrics {
         self.cold_latency_s += other.cold_latency_s;
         self.idle_pod_seconds += other.idle_pod_seconds;
         self.wasted_idle_seconds += other.wasted_idle_seconds;
+        self.chaos.merge(&other.chaos);
     }
 
     /// Cold-start rate in [0,1].

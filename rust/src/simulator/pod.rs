@@ -1,7 +1,7 @@
 //! Pod state for the per-function warm pool.
 
 /// A pending keep-alive decision awaiting its realized outcome.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Pending {
     /// Chosen action (index into [`crate::KEEP_ALIVE_ACTIONS`]).
     pub action: usize,

@@ -1,0 +1,329 @@
+//! Properties of the `chaos` fault-injection subsystem:
+//!
+//! 1. A `None`/empty plan is byte-identical to a run without the subsystem
+//!    — injection disabled really is a no-op.
+//! 2. Same plan + same seed ⇒ bit-identical results, across reruns *and*
+//!    shard counts (fault draws are pure functions of the event identity).
+//! 3. A certain (p = 1) spawn failure exhausts the retry budget on every
+//!    cold start — the deterministic anchor for the backoff accounting.
+//! 4. A full-trace carbon outage degrades only the decision *inputs*:
+//!    carbon accounting still reads the true trace, so a CI-blind policy's
+//!    metrics are bitwise unchanged while every decision counts as stale.
+//! 5. The online router and the engine agree invocation-by-invocation
+//!    under the same plan.
+
+use std::sync::Arc;
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::chaos::{ChaosInjector, Fault, FaultPlan, RecoveryConfig};
+use lace_rl::coordinator::{InvocationRequest, Router, RouterConfig};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::dpso::{Dpso, DpsoConfig};
+use lace_rl::policy::{BoxedPolicy, CarbonMin, FixedTimeout, LatencyMin};
+use lace_rl::prop_assert;
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::simulator::sharded::ShardedSimulator;
+use lace_rl::trace::model::Trace;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+fn small_trace(rng: &mut Rng) -> Trace {
+    let cfg = SynthConfig {
+        n_functions: 8 + rng.index(20),
+        duration_s: 600.0 + rng.f64() * 1200.0,
+        target_invocations: 2_000 + rng.index(3_000),
+        seed: rng.next_u64(),
+        ..SynthConfig::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+fn random_ci(rng: &mut Rng) -> CarbonTrace {
+    match rng.index(2) {
+        0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+        _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+    }
+}
+
+fn policy_grid() -> Vec<(&'static str, Box<dyn Fn() -> BoxedPolicy>)> {
+    vec![
+        ("huawei-60s", Box::new(|| Box::new(FixedTimeout::huawei()) as BoxedPolicy)),
+        ("latency-min", Box::new(|| Box::new(LatencyMin) as BoxedPolicy)),
+        ("carbon-min", Box::new(|| Box::new(CarbonMin) as BoxedPolicy)),
+        (
+            "dpso-ecolife",
+            Box::new(|| Box::new(Dpso::new(DpsoConfig::default())) as BoxedPolicy),
+        ),
+    ]
+}
+
+fn span_of(trace: &Trace) -> (f64, f64) {
+    let t0 = trace.invocations.first().map(|i| i.t).unwrap_or(0.0);
+    let t1 = trace.invocations.last().map(|i| i.t).unwrap_or(t0);
+    (t0, t1)
+}
+
+/// Bitwise comparison of the non-chaos metric fields of two runs.
+fn assert_metrics_bitwise(
+    name: &str,
+    a: &lace_rl::simulator::metrics::SimMetrics,
+    b: &lace_rl::simulator::metrics::SimMetrics,
+) -> Result<(), String> {
+    lace_rl::prop_assert!(
+        a.invocations == b.invocations
+            && a.cold_starts == b.cold_starts
+            && a.warm_starts == b.warm_starts,
+        "{name}: counts diverge"
+    );
+    for (field, x, y) in [
+        ("keepalive_carbon_g", a.keepalive_carbon_g, b.keepalive_carbon_g),
+        ("exec_carbon_g", a.exec_carbon_g, b.exec_carbon_g),
+        ("cold_carbon_g", a.cold_carbon_g, b.cold_carbon_g),
+        ("cold_latency_s", a.cold_latency_s, b.cold_latency_s),
+        ("latency_sum", a.latency.sum, b.latency.sum),
+        ("idle_pod_seconds", a.idle_pod_seconds, b.idle_pod_seconds),
+        ("wasted_idle_seconds", a.wasted_idle_seconds, b.wasted_idle_seconds),
+    ] {
+        lace_rl::prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{name}: {field} diverges: {x:e} vs {y:e}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn disabled_plan_is_byte_identical_to_no_injector() {
+    forall("empty plan == no injector", 4, 281, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        for (name, factory) in policy_grid() {
+            let base = SimConfig { track_latencies: true, ..SimConfig::default() };
+            let with_empty = SimConfig {
+                chaos: Some(Arc::new(ChaosInjector::new(FaultPlan::empty(
+                    rng.next_u64(),
+                )))),
+                ..base.clone()
+            };
+            let mut p = factory();
+            let off = Simulator::new(&trace, &ci, energy.clone(), base).run(p.as_mut());
+            let mut p = factory();
+            let on =
+                Simulator::new(&trace, &ci, energy.clone(), with_empty).run(p.as_mut());
+            assert_metrics_bitwise(name, &off.metrics, &on.metrics)?;
+            prop_assert!(
+                !on.metrics.chaos.any(),
+                "{name}: empty plan recorded chaos events"
+            );
+            prop_assert!(
+                off.latencies.len() == on.latencies.len()
+                    && off
+                        .latencies
+                        .iter()
+                        .zip(on.latencies.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name}: latencies changed by an empty plan"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_plan_is_deterministic_and_shard_invariant() {
+    forall("same plan + seed => bit-identical", 3, 282, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let (t0, t1) = span_of(&trace);
+        let intensity = *rng.choice(&[0.3, 0.7, 1.0]);
+        let plan = FaultPlan::canned(rng.next_u64(), t0, t1, intensity);
+        let cfg = SimConfig {
+            chaos: Some(Arc::new(ChaosInjector::new(plan))),
+            track_latencies: true,
+            ..SimConfig::default()
+        };
+        for (name, factory) in policy_grid() {
+            let mut p = factory();
+            let a = Simulator::new(&trace, &ci, energy.clone(), cfg.clone()).run(p.as_mut());
+            let mut p = factory();
+            let b = Simulator::new(&trace, &ci, energy.clone(), cfg.clone()).run(p.as_mut());
+            assert_metrics_bitwise(name, &a.metrics, &b.metrics)?;
+            prop_assert!(
+                a.metrics.chaos == b.metrics.chaos,
+                "{name}: chaos counters not reproducible: {:?} vs {:?}",
+                a.metrics.chaos,
+                b.metrics.chaos
+            );
+            prop_assert!(
+                a.latencies
+                    .iter()
+                    .zip(b.latencies.iter())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{name}: latencies not reproducible"
+            );
+            for k in [2usize, 5] {
+                let mut p = factory();
+                let sh = ShardedSimulator::new(&trace, &ci, energy.clone(), cfg.clone())
+                    .with_shards(k)
+                    .run(p.as_mut());
+                assert_metrics_bitwise(&format!("{name} k={k}"), &a.metrics, &sh.metrics)?;
+                prop_assert!(
+                    sh.metrics.chaos == a.metrics.chaos,
+                    "{name} k={k}: sharded chaos counters drifted"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn certain_spawn_failure_exhausts_the_retry_budget() {
+    forall("p=1 spawn failure exhausts retries", 4, 283, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let (_, t1) = span_of(&trace);
+        let rc = RecoveryConfig::default();
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            faults: vec![Fault::SpawnFailure { from_s: 0.0, until_s: t1 + 1.0, p: 1.0 }],
+            recovery: rc,
+        };
+        let cfg = SimConfig {
+            chaos: Some(Arc::new(ChaosInjector::new(plan))),
+            ..SimConfig::default()
+        };
+        let r = Simulator::new(&trace, &ci, EnergyModel::default(), cfg)
+            .run(&mut FixedTimeout::huawei());
+        let want = r.metrics.cold_starts * u64::from(rc.max_spawn_retries);
+        prop_assert!(
+            r.metrics.chaos.spawn_retries == want,
+            "spawn_retries {} != cold_starts {} x budget {}",
+            r.metrics.chaos.spawn_retries,
+            r.metrics.cold_starts,
+            rc.max_spawn_retries
+        );
+        prop_assert!(
+            r.metrics.chaos.retry_delay_s > 0.0,
+            "no backoff delay despite {} retries",
+            r.metrics.chaos.spawn_retries
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn full_outage_degrades_only_decision_inputs() {
+    forall("outage is accounting-neutral for CI-blind policies", 4, 284, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let (t0, t1) = span_of(&trace);
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            // Generously past the last completion so every decision is
+            // inside the outage.
+            faults: vec![Fault::CarbonOutage { from_s: t0, until_s: t1 + 10_000.0 }],
+            recovery: RecoveryConfig::default(),
+        };
+        let chaos_cfg = SimConfig {
+            chaos: Some(Arc::new(ChaosInjector::new(plan))),
+            ..SimConfig::default()
+        };
+        // Huawei's fixed timeout never reads ctx.ci, so the stale fallback
+        // cannot change its decisions — all non-chaos metrics must match
+        // the fault-free run bit-for-bit.
+        let base = Simulator::new(&trace, &ci, energy.clone(), SimConfig::default())
+            .run(&mut FixedTimeout::huawei());
+        let faulted = Simulator::new(&trace, &ci, energy.clone(), chaos_cfg)
+            .run(&mut FixedTimeout::huawei());
+        assert_metrics_bitwise("huawei-60s", &base.metrics, &faulted.metrics)?;
+        prop_assert!(
+            faulted.metrics.chaos.stale_ci_decisions == faulted.metrics.invocations,
+            "stale decisions {} != invocations {}",
+            faulted.metrics.chaos.stale_ci_decisions,
+            faulted.metrics.invocations
+        );
+        prop_assert!(
+            faulted.metrics.chaos.spawn_retries == 0
+                && faulted.metrics.chaos.degraded_decisions == 0,
+            "outage-only plan triggered other fault classes"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn router_matches_engine_under_the_same_plan() {
+    forall("router == engine under chaos", 3, 285, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        let (t0, t1) = span_of(&trace);
+        let plan = FaultPlan::canned(rng.next_u64(), t0, t1, 1.0);
+        let inj = Arc::new(ChaosInjector::new(plan));
+
+        let sim_cfg = SimConfig {
+            chaos: Some(inj.clone()),
+            track_latencies: true,
+            ..SimConfig::default()
+        };
+        let sim = Simulator::new(&trace, &ci, energy.clone(), sim_cfg)
+            .run(&mut FixedTimeout::huawei());
+
+        let router_cfg = RouterConfig { chaos: Some(inj), ..RouterConfig::default() };
+        let mut router = Router::new(
+            trace.functions.clone(),
+            FixedTimeout::huawei(),
+            ci.clone(),
+            energy,
+            router_cfg,
+        );
+        let mut latencies = Vec::with_capacity(trace.invocations.len());
+        for (id, inv) in trace.invocations.iter().enumerate() {
+            let resp = router.handle(&InvocationRequest {
+                id: id as u64,
+                t: inv.t,
+                func: inv.func,
+                exec_s: inv.exec_s,
+            });
+            latencies.push(resp.latency_s);
+        }
+        let (_, rm) = router.into_parts();
+        prop_assert!(
+            rm.cold_starts == sim.metrics.cold_starts,
+            "cold starts diverge: router {} vs engine {}",
+            rm.cold_starts,
+            sim.metrics.cold_starts
+        );
+        prop_assert!(
+            latencies.len() == sim.latencies.len()
+                && latencies
+                    .iter()
+                    .zip(sim.latencies.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "per-invocation latencies diverge under chaos"
+        );
+        // Integer counters match exactly; the f64 backoff total is summed
+        // in arrival order online vs function order offline, so compare
+        // within rounding slack.
+        prop_assert!(
+            rm.chaos.spawn_retries == sim.metrics.chaos.spawn_retries
+                && rm.chaos.stale_ci_decisions == sim.metrics.chaos.stale_ci_decisions
+                && rm.chaos.degraded_decisions == sim.metrics.chaos.degraded_decisions,
+            "chaos counters diverge: router {:?} vs engine {:?}",
+            rm.chaos,
+            sim.metrics.chaos
+        );
+        let (a, b) = (rm.chaos.retry_delay_s, sim.metrics.chaos.retry_delay_s);
+        prop_assert!(
+            (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0),
+            "retry delay totals diverge: {a} vs {b}"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,232 @@
+//! Online/offline lifecycle parity: the coordinator's `PodManager` path
+//! (`Router::handle`) and the simulator engine make bit-identical warm/cold
+//! decisions, charge bit-identical idle spans and carbon, and feed the
+//! policy bit-identical decision contexts and outcomes on the same
+//! trace + policy. This is the contract that lets serve-mode results stand
+//! in for simulated ones (DESIGN.md §6), and it pins the tied-expiry
+//! cold-penalty attribution (exactly one charged outcome per cold start)
+//! on both stacks.
+
+use lace_rl::carbon::intensity::CarbonTrace;
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::coordinator::{InvocationRequest, Router, RouterConfig};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::policy::{
+    CarbonMin, DecisionContext, FixedTimeout, KeepAlivePolicy, LatencyMin, Outcome,
+};
+use lace_rl::prop_assert;
+use lace_rl::simulator::engine::{SimConfig, Simulator};
+use lace_rl::trace::model::Trace;
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::quickcheck::forall;
+use lace_rl::util::rng::Rng;
+
+fn small_trace(rng: &mut Rng) -> Trace {
+    let cfg = SynthConfig {
+        n_functions: 8 + rng.index(20),
+        duration_s: 600.0 + rng.f64() * 1200.0,
+        target_invocations: 2_000 + rng.index(3_000),
+        seed: rng.next_u64(),
+        ..SynthConfig::default()
+    };
+    TraceGenerator::new(cfg).generate()
+}
+
+fn random_ci(rng: &mut Rng) -> CarbonTrace {
+    match rng.index(2) {
+        0 => CarbonTrace::constant(100.0 + rng.f64() * 600.0),
+        _ => synth_region(Region::SolarHeavy, 1, rng.next_u64()),
+    }
+}
+
+/// Everything the policy is shown at one decision point, as raw bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct DecideKey {
+    t: u64,
+    ci: u64,
+    reuse_probs: [u64; 5],
+    idle_power_w: u64,
+    action: usize,
+    keep_s: u64,
+}
+
+/// Everything a resolved outcome reports, as raw bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OutcomeKey {
+    func: u32,
+    action: usize,
+    t: u64,
+    resolved_t: u64,
+    reused: bool,
+    idle_span_s: u64,
+    idle_carbon_g: u64,
+    cold_penalty_s: u64,
+}
+
+/// Recording wrapper: delegates every trait method to the inner policy and
+/// logs the decision inputs/outputs and resolved outcomes bit-exactly.
+struct Rec<P> {
+    inner: P,
+    decides: Vec<DecideKey>,
+    outcomes: Vec<OutcomeKey>,
+}
+
+impl<P> Rec<P> {
+    fn new(inner: P) -> Self {
+        Rec { inner, decides: Vec::new(), outcomes: Vec::new() }
+    }
+}
+
+impl<P: KeepAlivePolicy> KeepAlivePolicy for Rec<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn decide(&mut self, ctx: &DecisionContext) -> usize {
+        self.inner.decide(ctx)
+    }
+
+    fn decide_seconds(&mut self, ctx: &DecisionContext) -> (usize, f64) {
+        let (action, keep_s) = self.inner.decide_seconds(ctx);
+        self.decides.push(DecideKey {
+            t: ctx.t.to_bits(),
+            ci: ctx.ci.to_bits(),
+            reuse_probs: ctx.reuse_probs.map(f64::to_bits),
+            idle_power_w: ctx.idle_power_w.to_bits(),
+            action,
+            keep_s: keep_s.to_bits(),
+        });
+        (action, keep_s)
+    }
+
+    fn refreshes_timer(&self) -> bool {
+        self.inner.refreshes_timer()
+    }
+
+    fn observe(&mut self, o: &Outcome) {
+        // End-of-trace flush outcomes only exist offline (the router never
+        // sees the trace end), so they are excluded from the parity log.
+        if !o.done {
+            self.outcomes.push(OutcomeKey {
+                func: o.func,
+                action: o.action,
+                t: o.t.to_bits(),
+                resolved_t: o.resolved_t.to_bits(),
+                reused: o.reused,
+                idle_span_s: o.idle_span_s.to_bits(),
+                idle_carbon_g: o.idle_carbon_g.to_bits(),
+                cold_penalty_s: o.cold_penalty_s.to_bits(),
+            });
+        }
+        self.inner.observe(o);
+    }
+}
+
+/// Run the same policy (two fresh instances) through the engine and the
+/// router on the same trace and compare the full lifecycle bit-for-bit.
+fn check_parity<P: KeepAlivePolicy>(
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    engine_policy: P,
+    router_policy: P,
+) -> Result<(), String> {
+    // Offline: simulator engine over the whole trace.
+    let mut engine_rec = Rec::new(engine_policy);
+    let cfg = SimConfig { track_latencies: true, ..SimConfig::default() };
+    let sim = Simulator::new(trace, ci, energy.clone(), cfg).run(&mut engine_rec);
+    let name = engine_rec.name().to_string();
+
+    // Online: router driven invocation-by-invocation.
+    let mut router = Router::new(
+        trace.functions.clone(),
+        Rec::new(router_policy),
+        ci.clone(),
+        energy.clone(),
+        RouterConfig::default(),
+    );
+    let mut latencies = Vec::with_capacity(trace.invocations.len());
+    let mut cold = 0u64;
+    for (id, inv) in trace.invocations.iter().enumerate() {
+        let resp = router.handle(&InvocationRequest {
+            id: id as u64,
+            t: inv.t,
+            func: inv.func,
+            exec_s: inv.exec_s,
+        });
+        latencies.push(resp.latency_s);
+        cold += u64::from(resp.cold);
+    }
+    let (router_rec, rm) = router.into_parts();
+
+    prop_assert!(
+        cold == sim.metrics.cold_starts && rm.cold_starts == sim.metrics.cold_starts,
+        "{name}: warm/cold split diverges: router {cold} vs engine {}",
+        sim.metrics.cold_starts
+    );
+    prop_assert!(
+        latencies.len() == sim.latencies.len()
+            && latencies
+                .iter()
+                .zip(sim.latencies.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{name}: per-invocation latencies diverge"
+    );
+
+    // One decision per invocation, identical inputs and outputs.
+    prop_assert!(
+        router_rec.decides.len() == trace.invocations.len()
+            && engine_rec.decides.len() == trace.invocations.len(),
+        "{name}: decision counts diverge: router {} / engine {} for {} invocations",
+        router_rec.decides.len(),
+        engine_rec.decides.len(),
+        trace.invocations.len()
+    );
+    for (i, (a, b)) in
+        router_rec.decides.iter().zip(engine_rec.decides.iter()).enumerate()
+    {
+        prop_assert!(
+            a == b,
+            "{name}: decision {i} diverges:\n  router {a:?}\n  engine {b:?}"
+        );
+    }
+
+    // Resolved outcomes (reuse + observed expiry, flush excluded) match
+    // bit-for-bit — idle spans, idle carbon, and the exactly-one
+    // cold-penalty attribution on tied expiries.
+    prop_assert!(
+        router_rec.outcomes.len() == engine_rec.outcomes.len(),
+        "{name}: outcome counts diverge: router {} vs engine {}",
+        router_rec.outcomes.len(),
+        engine_rec.outcomes.len()
+    );
+    for (i, (a, b)) in
+        router_rec.outcomes.iter().zip(engine_rec.outcomes.iter()).enumerate()
+    {
+        prop_assert!(
+            a == b,
+            "{name}: outcome {i} diverges:\n  router {a:?}\n  engine {b:?}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn router_lifecycle_matches_engine_bitwise() {
+    forall("router lifecycle == engine lifecycle", 4, 291, |rng| {
+        let trace = small_trace(rng);
+        let ci = random_ci(rng);
+        let energy = EnergyModel::default();
+        check_parity(&trace, &ci, &energy, FixedTimeout::huawei(), FixedTimeout::huawei())?;
+        check_parity(
+            &trace,
+            &ci,
+            &energy,
+            FixedTimeout::new(10.0),
+            FixedTimeout::new(10.0),
+        )?;
+        check_parity(&trace, &ci, &energy, LatencyMin, LatencyMin)?;
+        check_parity(&trace, &ci, &energy, CarbonMin, CarbonMin)?;
+        Ok(())
+    });
+}

@@ -99,3 +99,39 @@ for f in files:
     print(f"  {f}: {n} lines ok")
 EOF
 echo "obs streams parse clean"
+
+# Chaos smoke: a quick serve under the canned fault plan must print a
+# parseable CHAOS_SUMMARY with faults actually injected, and the summary —
+# every counter and plan-derived field — must be bit-stable across reruns
+# (the chaos determinism invariant, property-tested in
+# rust/tests/property_chaos.rs; fault draws are virtual-time-keyed, so
+# wall-clock pacing cannot perturb them).
+echo "== chaos smoke (serve under canned plan, determinism gate) =="
+chaos_a=$(cargo run --release --quiet --bin lace-rl -- chaos --quick --policy huawei)
+chaos_b=$(cargo run --release --quiet --bin lace-rl -- chaos --quick --policy huawei)
+sum_a=$(grep '^CHAOS_SUMMARY ' <<<"$chaos_a")
+sum_b=$(grep '^CHAOS_SUMMARY ' <<<"$chaos_b")
+if [[ -z "$sum_a" ]]; then
+    echo "error: chaos run printed no CHAOS_SUMMARY line" >&2
+    exit 1
+fi
+if [[ "$sum_a" != "$sum_b" ]]; then
+    echo "error: CHAOS_SUMMARY not reproducible across identical runs" >&2
+    diff <(echo "$sum_a") <(echo "$sum_b") >&2 || true
+    exit 1
+fi
+CHAOS_SUMMARY_LINE="$sum_a" python3 - <<'EOF'
+import json, os, sys
+line = os.environ["CHAOS_SUMMARY_LINE"]
+doc = json.loads(line.removeprefix("CHAOS_SUMMARY "))
+keys = ["faults_injected", "spawn_retries", "retry_delay_s",
+        "degraded_decisions", "stale_ci_decisions", "driver_stalls",
+        "fallback_s"]
+missing = [k for k in keys if k not in doc]
+if missing:
+    sys.exit(f"error: CHAOS_SUMMARY missing keys: {missing}")
+if doc["faults_injected"] <= 0:
+    sys.exit("error: canned full-intensity plan injected no faults")
+print(f"  {line}")
+EOF
+echo "chaos summary parses clean and is reproducible"
