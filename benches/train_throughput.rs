@@ -1,0 +1,145 @@
+//! DQN gradient-step throughput: the pure-Rust `rl::native_train` batched
+//! step vs the AOT PJRT `dqn_train_step` executable, in steps/sec on
+//! identical replay minibatches (batch 64, dims 10-64-64-5).
+//!
+//! The native backend always runs; the PJRT rows are skipped when no
+//! artifact set is built. When both run, the bench first **gates on
+//! agreement**: 100 shared minibatches through both backends must keep
+//! params and loss within 1e-5, else the process exits nonzero — a perf
+//! number for a step that computes something different is meaningless.
+//!
+//! Writes `BENCH_train.json` (median ns + steps/s per label) so
+//! `scripts/bench_smoke.sh` can track the training-path perf trajectory
+//! across PRs. Pass `--smoke` for a shrunken workload (CI-scale).
+
+use lace_rl::rl::backend::TrainBackend;
+use lace_rl::rl::native_train::NativeBackend;
+use lace_rl::rl::qnet::QNetParams;
+use lace_rl::rl::replay::SampleBatch;
+use lace_rl::rl::trainer::default_dims;
+use lace_rl::runtime::backend::PjrtBackend;
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, TrainStep};
+use lace_rl::util::bench::{bench_once, black_box, Report};
+use lace_rl::util::rng::Rng;
+
+fn synthetic_batch(rng: &mut Rng, batch: usize, n_actions: usize) -> SampleBatch {
+    let mut sb = SampleBatch::new(batch);
+    for x in sb.states.iter_mut() {
+        *x = rng.f64() as f32;
+    }
+    for x in sb.next_states.iter_mut() {
+        *x = rng.f64() as f32;
+    }
+    for a in sb.actions.iter_mut() {
+        *a = rng.index(n_actions) as i32;
+    }
+    for r in sb.rewards.iter_mut() {
+        *r = -(rng.f64() as f32);
+    }
+    for d in sb.dones.iter_mut() {
+        *d = if rng.chance(0.2) { 1.0 } else { 0.0 };
+    }
+    sb
+}
+
+/// Time `chunk` gradient steps per sample on `backend`; returns steps/sec
+/// from the median sample.
+fn bench_backend(
+    report: &mut Report,
+    label: &str,
+    backend: &mut dyn TrainBackend,
+    batches: &[SampleBatch],
+    chunk: usize,
+    samples: usize,
+) -> f64 {
+    let mut t: u64 = 0;
+    let s = bench_once(label, samples, || {
+        for _ in 0..chunk {
+            t += 1;
+            let sb = &batches[t as usize % batches.len()];
+            black_box(backend.step(t, sb).expect("gradient step"));
+            if t % 500 == 0 {
+                backend.sync_target();
+            }
+        }
+    });
+    let steps_per_s = chunk as f64 / (s.median_ns / 1e9);
+    println!("  -> {steps_per_s:.0} steps/s\n");
+    report.add(s);
+    steps_per_s
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!("== train-step throughput{} ==\n", if smoke { " (smoke)" } else { "" });
+
+    let dims = default_dims();
+    let batch = 64;
+    let init = QNetParams::he_uniform(dims, 3);
+    let mut rng = Rng::new(9);
+    let batches: Vec<SampleBatch> =
+        (0..16).map(|_| synthetic_batch(&mut rng, batch, dims.3)).collect();
+
+    let (chunk, samples) = if smoke { (100, 3) } else { (1000, 5) };
+    let mut report = Report::new();
+
+    // PJRT side is optional: artifact-less machines still get native rows.
+    let dir = artifacts::default_dir();
+    let pjrt = if std::path::Path::new(&dir).join("manifest.json").exists() {
+        let art = ArtifactSet::open(&dir)?;
+        anyhow::ensure!(
+            art.manifest.dims() == dims && art.manifest.train_batch == batch,
+            "artifact manifest disagrees with bench dims/batch"
+        );
+        let rt = PjrtRuntime::cpu()?;
+        Some((art, rt))
+    } else {
+        println!("(no artifacts at {dir}; benching native backend only)\n");
+        None
+    };
+    // Executables are cheap to reload; build one per use site rather than
+    // threading a shared handle through ownership-taking constructors.
+    let load_step = |art: &ArtifactSet, rt: &PjrtRuntime| -> anyhow::Result<TrainStep> {
+        let exe = rt.load_hlo_text(art.train_step_path().to_str().unwrap())?;
+        Ok(TrainStep::new(exe, batch, dims))
+    };
+
+    // --- Agreement gate: a wrong fast step must not produce a bench row.
+    if let Some((ref art, ref rt)) = pjrt {
+        let mut a = PjrtBackend::new(load_step(art, rt)?, init.clone());
+        let mut b = NativeBackend::new(init.clone(), batch);
+        let mut worst = 0.0f32;
+        for t in 1..=100u64 {
+            let sb = &batches[t as usize % batches.len()];
+            let la = a.step(t, sb)?;
+            let lb = b.step(t, sb)?;
+            worst = worst.max((la - lb).abs());
+            worst = worst.max(a.params().max_abs_diff(b.params()));
+            if t % 25 == 0 {
+                a.sync_target();
+                b.sync_target();
+            }
+        }
+        if worst > 1e-5 {
+            eprintln!("AGREEMENT GATE FAILED: native vs PJRT max |Δ| = {worst:e} > 1e-5");
+            std::process::exit(1);
+        }
+        println!("agreement gate: native vs PJRT max |Δ| = {worst:e} over 100 steps  OK\n");
+    }
+
+    // --- Throughput.
+    let mut native = NativeBackend::new(init.clone(), batch);
+    let native_sps =
+        bench_backend(&mut report, "train/step-native", &mut native, &batches, chunk, samples);
+
+    if let Some((ref art, ref rt)) = pjrt {
+        let mut backend = PjrtBackend::new(load_step(art, rt)?, init);
+        let pjrt_sps =
+            bench_backend(&mut report, "train/step-pjrt", &mut backend, &batches, chunk, samples);
+        println!("native/pjrt speedup: {:.2}x\n", native_sps / pjrt_sps.max(1e-9));
+    }
+
+    report.write("BENCH_train.json")?;
+    println!("wrote BENCH_train.json");
+    Ok(())
+}

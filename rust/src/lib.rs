@@ -9,7 +9,8 @@
 //! * **L3 (this crate)** — everything that runs: trace + carbon substrates,
 //!   energy model, event-driven serverless cluster simulator, the keep-alive
 //!   policies (Huawei-static, Latency-Min, Carbon-Min, DPSO/EcoLife, Oracle,
-//!   LACE-RL), the DQN training loop driving the AOT train step via PJRT,
+//!   LACE-RL), the DQN training loop driving either the AOT train step via
+//!   PJRT or the pure-Rust batched gradient engine (`--backend native`),
 //!   a threaded online coordinator, and the experiment harness regenerating
 //!   every figure and table of the paper.
 //!
@@ -28,8 +29,10 @@
 //! | [`simulator::parallel`] | sweep harness: policy×config cells across scoped threads, deterministic order, bit-identical to sequential |
 //! | [`simulator::sharded`] | function-sharded single-run parallelism: one trace split across cores via `KeepAlivePolicy::fork`, bit-identical to sequential |
 //! | [`policy`] | the six keep-alive policies behind one trait |
-//! | [`rl`] | state encoder, replay buffer, ε-greedy agent, Rust-side DQN trainer, weight I/O |
-//! | [`runtime`] | PJRT client wrapper: load HLO text artifacts, compile, execute |
+//! | [`rl`] | state encoder, replay buffer, ε-greedy agent, backend-agnostic DQN trainer, weight I/O |
+//! | [`rl::native_train`] | pure-Rust batched train step: GEMM forward/backward + in-place Adam, zero allocations per gradient step |
+//! | [`runtime`] | PJRT client wrapper: load HLO text artifacts, compile, execute; `PjrtBackend` gradient engine |
+//! | [`util::gemm`] | shared 4-wide register-tiled f32 GEMM kernels behind both the inference and training hot paths |
 //! | [`coordinator`] | threaded online control plane: workload driver → router → pod lifecycle |
 //! | [`experiments`] | one harness per paper figure/table |
 //! | [`metrics`] | composite metrics (LCP, IRI) and report formatting |

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! lace-rl gen-trace   [--out trace.csv] [--seed 7] [--functions 400] ...
-//! lace-rl train       [--episodes 30] [--lambda 0.5] [--quick]
+//! lace-rl train       [--episodes 30] [--lambda 0.5] [--backend native|pjrt] [--quick]
 //! lace-rl simulate    [--policy lace-rl|huawei|latency-min|carbon-min|dpso|oracle]
 //! lace-rl experiment  <fig1|fig2|fig3|table2|fig5|fig6|fig7|fig8|fig9|table3|cost|fig10|ablation|resilience|all>
 //! lace-rl serve       [--policy ...] [--speedup 0] — online coordinator replay
@@ -58,7 +58,7 @@ fn print_usage() {
          \n\
          SUBCOMMANDS:\n\
            gen-trace    generate a synthetic Huawei-like trace CSV\n\
-           train        train the DQN via the AOT PJRT train step\n\
+           train        train the DQN (--backend native|pjrt; native needs no artifacts)\n\
            simulate     run one policy over the test workload\n\
            experiment   regenerate a paper figure/table (or 'all')\n\
            serve        replay the workload through the online coordinator\n\
@@ -72,6 +72,8 @@ fn print_usage() {
            --policy NAME     lace-rl|huawei|latency-min|carbon-min|dpso|oracle\n\
            --lambda X        carbon trade-off weight in [0,1] (default 0.5)\n\
            --artifacts DIR   artifact directory (default ./artifacts)\n\
+           --backend NAME    train backend: pjrt (default) or native (pure Rust,\n\
+                             zero-alloc gradient steps, no artifacts required)\n\
            --obs             stream structured telemetry to results/obs/ as JSONL\n\
                              (pass it last: it is a bare flag, not --key value)"
     );
@@ -104,23 +106,41 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let w = workload::build(seed_of(args), quick);
-    let artifacts = ArtifactSet::open(args.str_or("artifacts", &artifacts::default_dir()))?;
-    let runtime = PjrtRuntime::cpu()?;
-    println!(
-        "training on {} invocations ({} functions); platform={}",
-        w.train.len(),
-        w.train.functions.len(),
-        runtime.platform()
-    );
+    let backend: lace_rl::rl::BackendKind = args.str_or("backend", "pjrt").parse()?;
     let cfg = TrainerConfig {
         episodes: args.usize_or("episodes", if quick { 12 } else { 30 }),
         steps_per_episode: args.usize_or("steps", 800),
         lambda_carbon: args.opt("lambda").and_then(|s| s.parse().ok()),
         seed: seed_of(args),
+        backend,
         ..TrainerConfig::default()
     };
+    println!(
+        "training on {} invocations ({} functions); backend={backend}",
+        w.train.len(),
+        w.train.functions.len(),
+    );
     let t0 = std::time::Instant::now();
-    let report = trainer::train_and_save(&artifacts, &runtime, &w.train, &w.ci, &w.energy, &cfg)?;
+    let default_dir = artifacts::default_dir();
+    let report = match ArtifactSet::open(args.str_or("artifacts", &default_dir)) {
+        Ok(artifacts) => {
+            // Artifacts present: either backend starts from the compiled
+            // init params and the weights land in the artifact dir.
+            let runtime = PjrtRuntime::cpu()?;
+            trainer::train_and_save(&artifacts, &runtime, &w.train, &w.ci, &w.energy, &cfg)?
+        }
+        Err(e) if backend == lace_rl::rl::BackendKind::Native => {
+            // No artifacts needed for the native backend: He-uniform init,
+            // weights saved next to the CWD.
+            println!("(artifacts unavailable: {e:#}; native backend trains from scratch)");
+            let report = trainer::train_native(&w.train, &w.ci, &w.energy, &cfg)?;
+            let out = args.str_or("out", "trained_weights.json");
+            lace_rl::rl::weights::save_params(out, &report.params)?;
+            println!("[train] saved weights to {out}");
+            report
+        }
+        Err(e) => return Err(e),
+    };
     println!(
         "trained {} episodes / {} gradient steps in {:.1}s ({:.1}s/episode)",
         report.episodes.len(),

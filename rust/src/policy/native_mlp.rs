@@ -7,6 +7,7 @@
 //! integration tests.
 
 use crate::rl::qnet::QNetParams;
+use crate::util::gemm::{linear, linear_relu};
 use std::sync::Arc;
 
 /// f32 MLP: input `d_in` → relu(h1) → relu(h2) → `d_out`.
@@ -79,47 +80,6 @@ impl NativeMlp {
             }
         }
         best
-    }
-}
-
-/// y = relu(x @ W + b); W is row-major [in, out].
-#[inline]
-fn linear_relu(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
-    linear(x, w, b, y);
-    for v in y.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-}
-
-/// y = x @ W + b. Accumulates row-wise so the inner loop streams W
-/// sequentially (cache-friendly for row-major weights). The axpy inner
-/// accumulation is unrolled into 4-wide chunks — independent lanes with no
-/// loop-carried dependency — so the autovectorizer emits packed SIMD adds
-/// instead of a scalar chain (same operation order per lane, bit-identical
-/// results).
-#[inline]
-fn linear(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
-    let n_out = y.len();
-    debug_assert_eq!(w.len(), x.len() * n_out);
-    y.copy_from_slice(b);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue; // ReLU sparsity: skip zeroed activations
-        }
-        let row = &w[i * n_out..(i + 1) * n_out];
-        let mut yc = y.chunks_exact_mut(4);
-        let mut rc = row.chunks_exact(4);
-        for (yj, wj) in (&mut yc).zip(&mut rc) {
-            yj[0] += xi * wj[0];
-            yj[1] += xi * wj[1];
-            yj[2] += xi * wj[2];
-            yj[3] += xi * wj[3];
-        }
-        for (yj, &wij) in yc.into_remainder().iter_mut().zip(rc.remainder()) {
-            *yj += xi * wij;
-        }
     }
 }
 

@@ -1,0 +1,98 @@
+//! Pluggable gradient-step backends for the DQN trainer.
+//!
+//! The trainer's hot loop ([`crate::rl::trainer`]) is backend-agnostic: it
+//! samples a [`SampleBatch`] and hands it to a [`TrainBackend`], which owns
+//! the online/target parameters and the Adam moments. Two implementations
+//! exist:
+//!
+//! - [`crate::rl::native_train::NativeBackend`] — pure-Rust batched
+//!   GEMM forward/backward + in-place Adam; zero allocations per step, no
+//!   artifacts required, bit-identical across reruns.
+//! - [`crate::runtime::backend::PjrtBackend`] — the AOT-compiled
+//!   `dqn_train_step` executable; requires the artifact set on disk.
+//!
+//! The two agree to ≤1e-5 on params and loss over ≥100 steps (see
+//! `rust/tests/property_native_train.rs`); DESIGN.md §11 records the
+//! numerics contract.
+
+use crate::rl::qnet::QNetParams;
+use crate::rl::replay::SampleBatch;
+use std::sync::Arc;
+
+/// Which gradient-step engine the trainer drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust batched train step (`rl::native_train`); no artifacts.
+    Native,
+    /// AOT-compiled PJRT `dqn_train_step` executable.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One DQN gradient step plus target-network bookkeeping.
+///
+/// Contract (mirrors `python/compile/model.py::dqn_train_step`):
+/// `step` must apply exactly one Adam update — TD targets from the target
+/// net (`r + γ·(1−done)·max_a' Q'(s')`), mean Huber loss over the batch on
+/// the chosen-action Q values, gradients through the online net only —
+/// and return the scalar loss. `t` is the 1-based Adam timestep used for
+/// bias correction.
+pub trait TrainBackend {
+    /// Human-readable backend name (obs metadata, logs).
+    fn name(&self) -> &'static str;
+
+    /// Run one gradient step on `batch`; returns the Huber loss.
+    fn step(&mut self, t: u64, batch: &SampleBatch) -> anyhow::Result<f32>;
+
+    /// Copy the online parameters into the target network.
+    fn sync_target(&mut self);
+
+    /// Shared snapshot of the current online parameters (for the rollout
+    /// agent's per-episode refresh). Called once per episode, so a clone
+    /// here is off the gradient hot path.
+    fn snapshot(&self) -> Arc<QNetParams>;
+
+    /// Borrow the current online parameters (final-weights export, tests).
+    fn params(&self) -> &QNetParams;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn backend_kind_round_trips() {
+        for kind in [BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::from_str(kind.as_str()).unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.as_str());
+        }
+        assert!(BackendKind::from_str("tpu").is_err());
+    }
+}

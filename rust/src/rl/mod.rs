@@ -2,17 +2,22 @@
 //!
 //! Everything RL lives here: the state encoder (Eq. 6), the replay buffer,
 //! the ε-greedy training policy that harvests transitions from simulator
-//! feedback, the Rust-side DQN trainer that drives the AOT-compiled
-//! `dqn_train_step` executable via PJRT, and weight serialization shared
-//! with the Python build path.
+//! feedback, the backend-agnostic DQN trainer ([`trainer`]) with its two
+//! gradient engines — the AOT-compiled PJRT `dqn_train_step` executable
+//! and the pure-Rust batched step ([`native_train`]) — and weight
+//! serialization shared with the Python build path.
 
 pub mod agent;
+pub mod backend;
 pub mod encoder;
+pub mod native_train;
 pub mod qnet;
 pub mod replay;
 pub mod trainer;
 pub mod weights;
 
+pub use backend::{BackendKind, TrainBackend};
 pub use encoder::{encode, STATE_DIM};
+pub use native_train::NativeBackend;
 pub use qnet::QNetParams;
-pub use replay::{ReplayBuffer, Transition};
+pub use replay::{ReplayBuffer, SampleBatch, Transition};

@@ -1,0 +1,519 @@
+//! Pure-Rust batched DQN train step — the gradient-path fast path.
+//!
+//! Mirrors the AOT-compiled `dqn_train_step` (python/compile/model.py) end
+//! to end: batched forward for the online and target nets as blocked GEMM
+//! ([`crate::util::gemm`], the same 4-wide kernel the inference fast path
+//! uses), TD targets + mean Huber loss, a hand-derived backward pass, and
+//! in-place Adam on double-buffered parameter/moment tensors. All scratch
+//! is preallocated in [`NativeTrainStep::new`], so one gradient step
+//! performs **zero heap allocations** (asserted by the counting-allocator
+//! test in `rust/tests/alloc_native_train.rs`).
+//!
+//! Numerics are written to track XLA bit-for-bit where cheap and to ≤1e-5
+//! where not (see DESIGN.md §11):
+//! - scalar constants like `1 − β₁` are folded in f64 and then cast to
+//!   f32, exactly as XLA folds Python-float constants;
+//! - ReLU's gradient at exactly 0 is 0.5, matching JAX's balanced
+//!   `maximum` tie-breaking;
+//! - the Adam update applies operations in the same order and
+//!   associativity as the jaxpr (`p − (lr·m̂)/(√v̂ + ε)`).
+//!
+//! Cross-backend agreement with the PJRT executable is property-tested in
+//! `rust/tests/property_native_train.rs`.
+
+use crate::rl::backend::TrainBackend;
+use crate::rl::qnet::QNetParams;
+use crate::rl::replay::SampleBatch;
+use crate::util::gemm::{gemm_bias, gemm_wt, grad_bias, grad_weights, relu};
+use std::sync::Arc;
+
+/// Hyper-parameters, identical to python/compile/model.py.
+pub const GAMMA: f32 = 0.99;
+pub const LR: f32 = 1e-3;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const HUBER_DELTA: f32 = 1.0;
+// Folded in f64 then cast, matching how XLA folds the Python-float
+// expressions `1.0 - ADAM_B1` / `1.0 - ADAM_B2` before f32 weaving.
+// (`1.0f32 - 0.9f32` has different bits — do not "simplify".)
+const ONE_MINUS_B1: f32 = (1.0 - 0.9) as f32;
+const ONE_MINUS_B2: f32 = (1.0 - 0.999) as f32;
+
+/// Preallocated scratch for one batched gradient step.
+///
+/// Holds every intermediate the forward/backward pass needs (target-net
+/// activations, online pre-activations + activations, error signals, and a
+/// full gradient accumulator), sized once for a fixed `(dims, batch)`.
+#[derive(Debug, Clone)]
+pub struct NativeTrainStep {
+    dims: (usize, usize, usize, usize),
+    batch: usize,
+    // Target-net forward (activations only — no gradients flow here).
+    th1: Vec<f32>,
+    th2: Vec<f32>,
+    tq: Vec<f32>,
+    targets: Vec<f32>,
+    // Online forward: pre-activations z* are kept for the ReLU gradient
+    // (a==0 cannot distinguish z<0 from the z==0 half-gradient tie).
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+    q: Vec<f32>,
+    // Backward error signals and gradient accumulator.
+    dq: Vec<f32>,
+    dh2: Vec<f32>,
+    dh1: Vec<f32>,
+    g: QNetParams,
+}
+
+impl NativeTrainStep {
+    pub fn new(dims: (usize, usize, usize, usize), batch: usize) -> Self {
+        assert!(batch > 0);
+        let (d, h1, h2, a) = dims;
+        debug_assert!(d > 0 && h1 > 0 && h2 > 0 && a > 0);
+        NativeTrainStep {
+            dims,
+            batch,
+            th1: vec![0.0; batch * h1],
+            th2: vec![0.0; batch * h2],
+            tq: vec![0.0; batch * a],
+            targets: vec![0.0; batch],
+            z1: vec![0.0; batch * h1],
+            a1: vec![0.0; batch * h1],
+            z2: vec![0.0; batch * h2],
+            a2: vec![0.0; batch * h2],
+            q: vec![0.0; batch * a],
+            dq: vec![0.0; batch * a],
+            dh2: vec![0.0; batch * h2],
+            dh1: vec![0.0; batch * h1],
+            g: QNetParams::zeros(dims),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// One gradient step: TD targets from `target`, mean Huber loss on the
+    /// chosen-action Q values of `online`, backward pass, in-place Adam on
+    /// `online`/`m`/`v`. `t` is the 1-based Adam timestep. Returns the
+    /// loss. Allocation-free.
+    pub fn step(
+        &mut self,
+        online: &mut QNetParams,
+        target: &QNetParams,
+        m: &mut QNetParams,
+        v: &mut QNetParams,
+        t: u64,
+        batch: &SampleBatch,
+    ) -> f32 {
+        let b = self.batch;
+        assert_eq!(batch.batch, b, "SampleBatch size != scratch size");
+        debug_assert!(t >= 1, "Adam timestep is 1-based");
+        debug_assert_eq!(online.dims, self.dims);
+        debug_assert_eq!(target.dims, self.dims);
+        let (d, h1, h2, a) = self.dims;
+
+        // Target-net forward on s′ (no gradient).
+        gemm_bias(&batch.next_states, &target.w1, &target.b1, &mut self.th1, b, d, h1);
+        relu(&mut self.th1);
+        gemm_bias(&self.th1, &target.w2, &target.b2, &mut self.th2, b, h1, h2);
+        relu(&mut self.th2);
+        gemm_bias(&self.th2, &target.w3, &target.b3, &mut self.tq, b, h2, a);
+
+        // TD targets: r + γ·(1−done)·max_a′ Q′(s′) (stop-gradient side).
+        for i in 0..b {
+            let row = &self.tq[i * a..(i + 1) * a];
+            let mut qmax = row[0];
+            for &qv in &row[1..] {
+                if qv > qmax {
+                    qmax = qv;
+                }
+            }
+            self.targets[i] = batch.rewards[i] + GAMMA * (1.0 - batch.dones[i]) * qmax;
+        }
+
+        // Online forward on s, keeping pre-activations for the backward.
+        gemm_bias(&batch.states, &online.w1, &online.b1, &mut self.z1, b, d, h1);
+        self.a1.copy_from_slice(&self.z1);
+        relu(&mut self.a1);
+        gemm_bias(&self.a1, &online.w2, &online.b2, &mut self.z2, b, h1, h2);
+        self.a2.copy_from_slice(&self.z2);
+        relu(&mut self.a2);
+        gemm_bias(&self.a2, &online.w3, &online.b3, &mut self.q, b, h2, a);
+
+        // Mean Huber loss on the chosen actions; dL/dq is nonzero only at
+        // the selected entries: clamp(err, ±δ)/B (exact for B a power of
+        // two; the clamp is the Huber derivative on both branches).
+        self.dq.fill(0.0);
+        let mut loss_sum = 0.0f32;
+        for i in 0..b {
+            let act = batch.actions[i] as usize;
+            debug_assert!(act < a, "action index out of range");
+            let err = self.q[i * a + act] - self.targets[i];
+            let abs = err.abs();
+            loss_sum += if abs <= HUBER_DELTA {
+                0.5 * err * err
+            } else {
+                HUBER_DELTA * (abs - 0.5 * HUBER_DELTA)
+            };
+            self.dq[i * a + act] = err.clamp(-HUBER_DELTA, HUBER_DELTA) / b as f32;
+        }
+        let loss = loss_sum / b as f32;
+
+        // Backward: layer 3 → 1. ReLU gradient is 1 for z>0, 0 for z<0,
+        // and 0.5 at z==0 exactly (JAX balanced `maximum` tie).
+        grad_weights(&self.a2, &self.dq, &mut self.g.w3, b, h2, a);
+        grad_bias(&self.dq, &mut self.g.b3, b, a);
+        gemm_wt(&self.dq, &online.w3, &mut self.dh2, b, h2, a);
+        relu_backward(&mut self.dh2, &self.z2);
+
+        grad_weights(&self.a1, &self.dh2, &mut self.g.w2, b, h1, h2);
+        grad_bias(&self.dh2, &mut self.g.b2, b, h2);
+        gemm_wt(&self.dh2, &online.w2, &mut self.dh1, b, h1, h2);
+        relu_backward(&mut self.dh1, &self.z1);
+
+        grad_weights(&batch.states, &self.dh1, &mut self.g.w1, b, d, h1);
+        grad_bias(&self.dh1, &mut self.g.b1, b, h1);
+
+        // In-place Adam with bias correction (t cast to f32 like the
+        // jaxpr's step counter).
+        let tf = t as f32;
+        let bc1 = 1.0 - ADAM_B1.powf(tf);
+        let bc2 = 1.0 - ADAM_B2.powf(tf);
+        adam_update(&mut online.w1, &mut m.w1, &mut v.w1, &self.g.w1, bc1, bc2);
+        adam_update(&mut online.b1, &mut m.b1, &mut v.b1, &self.g.b1, bc1, bc2);
+        adam_update(&mut online.w2, &mut m.w2, &mut v.w2, &self.g.w2, bc1, bc2);
+        adam_update(&mut online.b2, &mut m.b2, &mut v.b2, &self.g.b2, bc1, bc2);
+        adam_update(&mut online.w3, &mut m.w3, &mut v.w3, &self.g.w3, bc1, bc2);
+        adam_update(&mut online.b3, &mut m.b3, &mut v.b3, &self.g.b3, bc1, bc2);
+
+        loss
+    }
+}
+
+/// dh ⊙= relu′(z): 1 for z>0, 0 for z<0, 0.5 at the z==0 tie.
+#[inline]
+fn relu_backward(dh: &mut [f32], z: &[f32]) {
+    debug_assert_eq!(dh.len(), z.len());
+    for (g, &zi) in dh.iter_mut().zip(z.iter()) {
+        if zi < 0.0 {
+            *g = 0.0;
+        } else if zi == 0.0 {
+            *g *= 0.5;
+        }
+    }
+}
+
+/// p −= (lr·m̂)/(√v̂ + ε), updating the moments in place. Operation order
+/// and associativity mirror the compiled jaxpr exactly.
+#[inline]
+fn adam_update(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], bc1: f32, bc2: f32) {
+    debug_assert!(p.len() == m.len() && m.len() == v.len() && v.len() == g.len());
+    for (((pi, mi), vi), &gi) in p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g.iter()) {
+        *mi = ADAM_B1 * *mi + ONE_MINUS_B1 * gi;
+        *vi = ADAM_B2 * *vi + ONE_MINUS_B2 * gi * gi;
+        let m_hat = *mi / bc1;
+        let v_hat = *vi / bc2;
+        *pi -= (LR * m_hat) / (v_hat.sqrt() + ADAM_EPS);
+    }
+}
+
+/// [`TrainBackend`] over [`NativeTrainStep`]: owns the online/target
+/// parameters and the Adam moments, double-buffered so every step mutates
+/// the same four tensors in place.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    kernel: NativeTrainStep,
+    online: QNetParams,
+    target: QNetParams,
+    m: QNetParams,
+    v: QNetParams,
+}
+
+impl NativeBackend {
+    /// Start from `init` (online and target both set to it, zero moments).
+    pub fn new(init: QNetParams, batch: usize) -> Self {
+        let dims = init.dims;
+        NativeBackend {
+            kernel: NativeTrainStep::new(dims, batch),
+            target: init.clone(),
+            m: QNetParams::zeros(dims),
+            v: QNetParams::zeros(dims),
+            online: init,
+        }
+    }
+
+    /// Adam moments (cross-backend agreement tests).
+    pub fn moments(&self) -> (&QNetParams, &QNetParams) {
+        (&self.m, &self.v)
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn step(&mut self, t: u64, batch: &SampleBatch) -> anyhow::Result<f32> {
+        Ok(self.kernel.step(&mut self.online, &self.target, &mut self.m, &mut self.v, t, batch))
+    }
+
+    fn sync_target(&mut self) {
+        self.target.copy_from(&self.online);
+    }
+
+    fn snapshot(&self) -> Arc<QNetParams> {
+        Arc::new(self.online.clone())
+    }
+
+    fn params(&self) -> &QNetParams {
+        &self.online
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::encoder::STATE_DIM;
+    use crate::util::rng::Rng;
+
+    const DIMS: (usize, usize, usize, usize) = (STATE_DIM, 16, 16, 5);
+
+    fn synthetic_batch(rng: &mut Rng, b: usize) -> SampleBatch {
+        let mut sb = SampleBatch::new(b);
+        for x in sb.states.iter_mut().chain(sb.next_states.iter_mut()) {
+            *x = rng.normal(0.0, 1.0) as f32;
+        }
+        for a in sb.actions.iter_mut() {
+            *a = rng.index(DIMS.3) as i32;
+        }
+        for r in sb.rewards.iter_mut() {
+            *r = rng.normal(-1.0, 2.0) as f32;
+        }
+        for (i, d) in sb.dones.iter_mut().enumerate() {
+            *d = if i % 7 == 0 { 1.0 } else { 0.0 };
+        }
+        sb
+    }
+
+    /// f64 reference implementation of the entire train step.
+    struct RefStep {
+        p: Vec<Vec<f64>>, // w1,b1,w2,b2,w3,b3
+        m: Vec<Vec<f64>>,
+        v: Vec<Vec<f64>>,
+        tp: Vec<Vec<f64>>,
+    }
+
+    fn dense(x: &[f64], w: &[f64], b: &[f64], d_in: usize, d_out: usize, rows: usize) -> Vec<f64> {
+        let mut y = vec![0.0; rows * d_out];
+        for r in 0..rows {
+            for j in 0..d_out {
+                let mut acc = b[j];
+                for i in 0..d_in {
+                    acc += x[r * d_in + i] * w[i * d_out + j];
+                }
+                y[r * d_out + j] = acc;
+            }
+        }
+        y
+    }
+
+    impl RefStep {
+        fn from(p: &QNetParams) -> Self {
+            let to64 = |v: &Vec<f32>| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+            let ps: Vec<Vec<f64>> = p.tensors().iter().map(|(_, _, d)| to64(d)).collect();
+            let zs: Vec<Vec<f64>> = ps.iter().map(|t| vec![0.0; t.len()]).collect();
+            RefStep { tp: ps.clone(), p: ps, v: zs.clone(), m: zs }
+        }
+
+        /// Returns pre-activations (z1, z2) and the final q; activations
+        /// are recomputed by the caller as max(z, 0).
+        fn forward(p: &[Vec<f64>], x: &[f64], rows: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+            let (d, h1, h2, a) = DIMS;
+            let z1 = dense(x, &p[0], &p[1], d, h1, rows);
+            let a1: Vec<f64> = z1.iter().map(|&v| v.max(0.0)).collect();
+            let z2 = dense(&a1, &p[2], &p[3], h1, h2, rows);
+            let a2: Vec<f64> = z2.iter().map(|&v| v.max(0.0)).collect();
+            let q = dense(&a2, &p[4], &p[5], h2, a, rows);
+            (z1, z2, q)
+        }
+
+        fn step(&mut self, t: u64, sb: &SampleBatch) -> f64 {
+            let (d, h1, h2, a) = DIMS;
+            let b = sb.batch;
+            let s: Vec<f64> = sb.states.iter().map(|&x| x as f64).collect();
+            let ns: Vec<f64> = sb.next_states.iter().map(|&x| x as f64).collect();
+
+            let (_, _, tq) = Self::forward(&self.tp, &ns, b);
+            let mut targets = vec![0.0; b];
+            for i in 0..b {
+                let row = &tq[i * a..(i + 1) * a];
+                let qmax = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                targets[i] =
+                    sb.rewards[i] as f64 + GAMMA as f64 * (1.0 - sb.dones[i] as f64) * qmax;
+            }
+
+            let (z1, z2, q) = Self::forward(&self.p, &s, b);
+            let a1: Vec<f64> = z1.iter().map(|&z| z.max(0.0)).collect();
+            let a2: Vec<f64> = z2.iter().map(|&z| z.max(0.0)).collect();
+
+            let mut dq = vec![0.0; b * a];
+            let mut loss = 0.0;
+            let delta = HUBER_DELTA as f64;
+            for i in 0..b {
+                let act = sb.actions[i] as usize;
+                let err = q[i * a + act] - targets[i];
+                loss += if err.abs() <= delta {
+                    0.5 * err * err
+                } else {
+                    delta * (err.abs() - 0.5 * delta)
+                };
+                dq[i * a + act] = err.clamp(-delta, delta) / b as f64;
+            }
+            loss /= b as f64;
+
+            let colsum = |dy: &[f64], n: usize| {
+                let mut g = vec![0.0; n];
+                for r in 0..b {
+                    for j in 0..n {
+                        g[j] += dy[r * n + j];
+                    }
+                }
+                g
+            };
+            let matt = |x: &[f64], dy: &[f64], di: usize, dn: usize| {
+                let mut g = vec![0.0; di * dn];
+                for r in 0..b {
+                    for i in 0..di {
+                        for j in 0..dn {
+                            g[i * dn + j] += x[r * di + i] * dy[r * dn + j];
+                        }
+                    }
+                }
+                g
+            };
+            let backprop = |dy: &[f64], w: &[f64], di: usize, dn: usize| {
+                let mut dx = vec![0.0; b * di];
+                for r in 0..b {
+                    for i in 0..di {
+                        for j in 0..dn {
+                            dx[r * di + i] += dy[r * dn + j] * w[i * dn + j];
+                        }
+                    }
+                }
+                dx
+            };
+            let relu_bw = |dh: &mut Vec<f64>, z: &[f64]| {
+                for (g, &zi) in dh.iter_mut().zip(z.iter()) {
+                    if zi < 0.0 {
+                        *g = 0.0;
+                    } else if zi == 0.0 {
+                        *g *= 0.5;
+                    }
+                }
+            };
+
+            let gw3 = matt(&a2, &dq, h2, a);
+            let gb3 = colsum(&dq, a);
+            let mut dh2 = backprop(&dq, &self.p[4], h2, a);
+            relu_bw(&mut dh2, &z2);
+            let gw2 = matt(&a1, &dh2, h1, h2);
+            let gb2 = colsum(&dh2, h2);
+            let mut dh1 = backprop(&dh2, &self.p[2], h1, h2);
+            relu_bw(&mut dh1, &z1);
+            let gw1 = matt(&s, &dh1, d, h1);
+            let gb1 = colsum(&dh1, h1);
+
+            let grads = [gw1, gb1, gw2, gb2, gw3, gb3];
+            let bc1 = 1.0 - (ADAM_B1 as f64).powi(t as i32);
+            let bc2 = 1.0 - (ADAM_B2 as f64).powi(t as i32);
+            for (k, g) in grads.iter().enumerate() {
+                for i in 0..g.len() {
+                    self.m[k][i] = ADAM_B1 as f64 * self.m[k][i] + (1.0 - ADAM_B1 as f64) * g[i];
+                    self.v[k][i] =
+                        ADAM_B2 as f64 * self.v[k][i] + (1.0 - ADAM_B2 as f64) * g[i] * g[i];
+                    let m_hat = self.m[k][i] / bc1;
+                    let v_hat = self.v[k][i] / bc2;
+                    self.p[k][i] -= LR as f64 * m_hat / (v_hat.sqrt() + ADAM_EPS as f64);
+                }
+            }
+            loss
+        }
+    }
+
+    #[test]
+    fn matches_f64_reference_over_steps() {
+        let init = QNetParams::he_uniform(DIMS, 5);
+        let mut backend = NativeBackend::new(init.clone(), 32);
+        let mut reference = RefStep::from(&init);
+        let mut rng = Rng::new(17);
+        let mut worst = 0.0f64;
+        for t in 1..=20u64 {
+            let sb = synthetic_batch(&mut rng, 32);
+            let loss = backend.step(t, &sb).unwrap();
+            let ref_loss = reference.step(t, &sb);
+            assert!(
+                (loss as f64 - ref_loss).abs() < 1e-4,
+                "loss diverged at t={t}: {loss} vs {ref_loss}"
+            );
+            let got = backend.params();
+            for (k, (_, _, data)) in got.tensors().iter().enumerate() {
+                for (i, &gv) in data.iter().enumerate() {
+                    worst = worst.max((gv as f64 - reference.p[k][i]).abs());
+                }
+            }
+        }
+        assert!(worst < 1e-4, "param drift vs f64 reference: {worst}");
+    }
+
+    #[test]
+    fn bit_identical_across_reruns() {
+        let run = || {
+            let mut backend = NativeBackend::new(QNetParams::he_uniform(DIMS, 5), 32);
+            let mut rng = Rng::new(23);
+            for t in 1..=50u64 {
+                let sb = synthetic_batch(&mut rng, 32);
+                backend.step(t, &sb).unwrap();
+                if t % 10 == 0 {
+                    backend.sync_target();
+                }
+            }
+            backend.params().clone()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "native training must be bit-identical");
+        let bits_equal = a
+            .tensors()
+            .iter()
+            .zip(b.tensors().iter())
+            .all(|((_, _, xa), (_, _, xb))| {
+                xa.iter().zip(xb.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+            });
+        assert!(bits_equal, "bit patterns diverged across reruns");
+    }
+
+    #[test]
+    fn sync_target_copies_online() {
+        let mut backend = NativeBackend::new(QNetParams::he_uniform(DIMS, 8), 8);
+        let mut rng = Rng::new(3);
+        let sb = synthetic_batch(&mut rng, 8);
+        backend.step(1, &sb).unwrap();
+        // Target still holds the init → next step differs from a synced run.
+        backend.sync_target();
+        let snap = backend.snapshot();
+        assert_eq!(backend.params().max_abs_diff(&snap), 0.0);
+    }
+
+    #[test]
+    fn one_minus_beta_constants_match_f64_folding() {
+        // XLA folds `1.0 - 0.9` in f64 before casting to f32; the naive
+        // f32 subtraction lands on different bits.
+        assert_eq!(ONE_MINUS_B1.to_bits(), 0.1f32.to_bits());
+        assert_ne!((1.0f32 - ADAM_B1).to_bits(), ONE_MINUS_B1.to_bits());
+        assert_eq!(ONE_MINUS_B2.to_bits(), 0.001f32.to_bits());
+    }
+}

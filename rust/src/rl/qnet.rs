@@ -47,6 +47,35 @@ impl QNetParams {
         }
     }
 
+    /// He-uniform initial weights (zero biases), deterministic in `seed`.
+    /// Rust-side stand-in for the compiled artifact's initial params so the
+    /// native backend can train without any PJRT assets on disk.
+    pub fn he_uniform(dims: (usize, usize, usize, usize), seed: u64) -> Self {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut p = Self::zeros(dims);
+        let (d, h1, h2, _) = dims;
+        for (w, fan_in) in [(&mut p.w1, d), (&mut p.w2, h1), (&mut p.w3, h2)] {
+            let limit = (6.0 / fan_in as f64).sqrt();
+            for v in w.iter_mut() {
+                *v = rng.range(-limit, limit) as f32;
+            }
+        }
+        p
+    }
+
+    /// Copy `other`'s values into this instance's existing buffers — no
+    /// heap allocation (unlike `clone`). Panics if dims differ.
+    pub fn copy_from(&mut self, other: &QNetParams) {
+        assert_eq!(self.dims, other.dims, "copy_from dims mismatch");
+        self.w1.copy_from_slice(&other.w1);
+        self.b1.copy_from_slice(&other.b1);
+        self.w2.copy_from_slice(&other.w2);
+        self.b2.copy_from_slice(&other.b2);
+        self.w3.copy_from_slice(&other.w3);
+        self.b3.copy_from_slice(&other.b3);
+    }
+
     /// Tensors in PARAM_KEYS order with their shapes.
     pub fn tensors(&self) -> [(&'static str, Vec<usize>, &Vec<f32>); 6] {
         let (d, h1, h2, a) = self.dims;
@@ -128,7 +157,13 @@ impl QNetParams {
     }
 
     /// Max |a - b| across all tensors (convergence / agreement checks).
+    /// Returns `f32::INFINITY` when the architectures differ — a silent
+    /// element-wise zip over mismatched dims would truncate and could
+    /// report two different networks as "equal".
     pub fn max_abs_diff(&self, other: &QNetParams) -> f32 {
+        if self.dims != other.dims {
+            return f32::INFINITY;
+        }
         let mut m = 0.0f32;
         for (a, b) in self
             .tensors()
@@ -185,5 +220,36 @@ mod tests {
         b.w2[3] = -0.25;
         assert_eq!(a.max_abs_diff(&b), 0.25);
         assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    fn max_abs_diff_mismatched_dims_is_infinite() {
+        // A silent zip over different architectures would truncate to the
+        // shorter tensors and could report 0.0 for unequal networks.
+        let a = QNetParams::zeros((2, 2, 2, 2));
+        let b = QNetParams::zeros((2, 4, 4, 2));
+        assert_eq!(a.max_abs_diff(&b), f32::INFINITY);
+        assert_eq!(b.max_abs_diff(&a), f32::INFINITY);
+    }
+
+    #[test]
+    fn he_uniform_deterministic_and_bounded() {
+        let a = QNetParams::he_uniform((10, 64, 64, 5), 7);
+        let b = QNetParams::he_uniform((10, 64, 64, 5), 7);
+        let c = QNetParams::he_uniform((10, 64, 64, 5), 8);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "same seed must be identical");
+        assert!(a.max_abs_diff(&c) > 0.0, "different seed must differ");
+        assert!(a.b1.iter().all(|&v| v == 0.0), "biases start at zero");
+        let limit = (6.0f64 / 10.0).sqrt() as f32;
+        assert!(a.w1.iter().all(|&v| v.abs() <= limit));
+        assert!(a.w1.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn copy_from_overwrites_in_place() {
+        let src = QNetParams::he_uniform((3, 4, 4, 2), 11);
+        let mut dst = QNetParams::zeros((3, 4, 4, 2));
+        dst.copy_from(&src);
+        assert_eq!(dst.max_abs_diff(&src), 0.0);
     }
 }

@@ -17,6 +17,40 @@ pub struct Transition {
     pub done: bool,
 }
 
+/// Preallocated flat minibatch buffers shared by both train backends.
+///
+/// Owning the five arrays as one struct lets the trainer sample once per
+/// gradient step with zero allocation and hand the same view to either the
+/// PJRT executable or the native train step (the cross-backend property
+/// test feeds both from a single `SampleBatch`).
+#[derive(Debug, Clone)]
+pub struct SampleBatch {
+    pub batch: usize,
+    /// `[batch * STATE_DIM]` row-major.
+    pub states: Vec<f32>,
+    /// Action indices, i32 to match the executable's input dtype.
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    /// `[batch * STATE_DIM]` row-major.
+    pub next_states: Vec<f32>,
+    /// 1.0 terminal / 0.0 otherwise.
+    pub dones: Vec<f32>,
+}
+
+impl SampleBatch {
+    pub fn new(batch: usize) -> Self {
+        assert!(batch > 0);
+        SampleBatch {
+            batch,
+            states: vec![0.0; batch * STATE_DIM],
+            actions: vec![0; batch],
+            rewards: vec![0.0; batch],
+            next_states: vec![0.0; batch * STATE_DIM],
+            dones: vec![0.0; batch],
+        }
+    }
+}
+
 /// Ring-buffer replay memory with uniform sampling.
 #[derive(Debug, Clone)]
 pub struct ReplayBuffer {
@@ -83,6 +117,13 @@ impl ReplayBuffer {
             rewards[b] = t.reward;
             dones[b] = if t.done { 1.0 } else { 0.0 };
         }
+    }
+
+    /// [`sample_into`](Self::sample_into) with a [`SampleBatch`]'s own
+    /// buffers — the per-gradient-step sampling path.
+    pub fn sample_batch(&self, rng: &mut Rng, out: &mut SampleBatch) {
+        let SampleBatch { batch, states, actions, rewards, next_states, dones } = out;
+        self.sample_into(rng, *batch, states, actions, rewards, next_states, dones);
     }
 
     /// Iterate stored transitions (diagnostics / tests).
@@ -155,6 +196,32 @@ mod tests {
         let mut rng = Rng::new(2);
         rb.sample_into(&mut rng, 1, &mut s, &mut a, &mut r, &mut ns, &mut d);
         assert_eq!(d[0], 1.0);
+    }
+
+    #[test]
+    fn sample_batch_matches_sample_into() {
+        let mut rb = ReplayBuffer::new(16);
+        for i in 0..16 {
+            rb.push(t(i as f32));
+        }
+        let batch = 8;
+        let mut sb = SampleBatch::new(batch);
+        let mut rng_a = Rng::new(99);
+        rb.sample_batch(&mut rng_a, &mut sb);
+
+        let mut s = vec![0.0; batch * STATE_DIM];
+        let mut a = vec![0i32; batch];
+        let mut r = vec![0.0f32; batch];
+        let mut ns = vec![0.0; batch * STATE_DIM];
+        let mut d = vec![0.0f32; batch];
+        let mut rng_b = Rng::new(99);
+        rb.sample_into(&mut rng_b, batch, &mut s, &mut a, &mut r, &mut ns, &mut d);
+
+        assert_eq!(sb.states, s);
+        assert_eq!(sb.actions, a);
+        assert_eq!(sb.rewards, r);
+        assert_eq!(sb.next_states, ns);
+        assert_eq!(sb.dones, d);
     }
 
     #[test]

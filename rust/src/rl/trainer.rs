@@ -1,8 +1,12 @@
-//! Rust-side DQN training loop driving the AOT `dqn_train_step` via PJRT.
+//! Rust-side DQN training loop, generic over the gradient-step backend.
 //!
 //! Python is compile-time only: the entire training loop — episodes over
 //! the training trace, ε decay, replay sampling, target-network syncs —
-//! runs here, with every gradient step executed by the AOT artifact.
+//! runs here. Each gradient step goes through a
+//! [`TrainBackend`]: either the AOT PJRT `dqn_train_step` executable
+//! ([`crate::runtime::backend::PjrtBackend`]) or the pure-Rust batched
+//! step ([`crate::rl::native_train::NativeBackend`]), selected by
+//! [`TrainerConfig::backend`] (CLI: `--backend native|pjrt`).
 //!
 //! Schedule (paper §IV-A4 scaled to this testbed): per episode the agent
 //! replays the training trace slice with ε-greedy exploration, harvested
@@ -12,15 +16,18 @@
 //! decays ×0.95 per episode to 0.05. λ_carbon is sampled per episode so the
 //! network learns the preference-conditioned policy (§III-C).
 
-use std::sync::Arc;
+use std::time::Instant;
 
 use crate::carbon::intensity::CarbonTrace;
 use crate::energy::model::EnergyModel;
 use crate::policy::native_mlp::NativeMlp;
 use crate::rl::agent::EpsilonGreedyAgent;
+use crate::rl::backend::{BackendKind, TrainBackend};
 use crate::rl::encoder::STATE_DIM;
+use crate::rl::native_train::NativeBackend;
 use crate::rl::qnet::QNetParams;
-use crate::rl::replay::ReplayBuffer;
+use crate::rl::replay::{ReplayBuffer, SampleBatch};
+use crate::runtime::backend::PjrtBackend;
 use crate::runtime::{ArtifactSet, PjrtRuntime, TrainStep};
 use crate::simulator::engine::SimConfig;
 use crate::simulator::sharded::ShardedSimulator;
@@ -41,6 +48,8 @@ pub struct TrainerConfig {
     /// Fixed λ_carbon, or None to sample per episode from {0.1 … 0.9}.
     pub lambda_carbon: Option<f64>,
     pub seed: u64,
+    /// Which gradient-step engine to drive (see [`BackendKind`]).
+    pub backend: BackendKind,
     /// Print per-episode progress lines.
     pub verbose: bool,
 }
@@ -58,6 +67,7 @@ impl Default for TrainerConfig {
             target_sync_steps: 500,
             lambda_carbon: None,
             seed: 17,
+            backend: BackendKind::Pjrt,
             verbose: true,
         }
     }
@@ -73,6 +83,31 @@ impl TrainerConfig {
             ..TrainerConfig::default()
         }
     }
+
+    /// Reject configurations the loop cannot run. In particular
+    /// `target_sync_steps == 0` used to reach a `% 0` panic deep in the
+    /// gradient loop; fail here with a real error instead.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.episodes > 0, "episodes must be ≥ 1");
+        anyhow::ensure!(self.batch > 0, "batch must be ≥ 1");
+        anyhow::ensure!(
+            self.replay_capacity >= self.batch,
+            "replay_capacity {} must be ≥ batch {}",
+            self.replay_capacity,
+            self.batch
+        );
+        anyhow::ensure!(
+            self.target_sync_steps > 0,
+            "target_sync_steps must be ≥ 1 (a zero cadence would never sync and \
+             divides by zero)"
+        );
+        anyhow::ensure!(
+            self.epsilon_decay > 0.0 && self.epsilon_decay <= 1.0,
+            "epsilon_decay must be in (0, 1], got {}",
+            self.epsilon_decay
+        );
+        Ok(())
+    }
 }
 
 /// Per-episode training statistics.
@@ -84,6 +119,9 @@ pub struct EpisodeStats {
     pub transitions: usize,
     pub mean_loss: f32,
     pub episode_reward: f64,
+    /// Gradient-step throughput over this episode's training phase
+    /// (steps/sec; 0.0 when the episode ran no gradient steps).
+    pub grad_steps_per_s: f64,
 }
 
 /// Final training report.
@@ -91,9 +129,18 @@ pub struct TrainReport {
     pub params: QNetParams,
     pub episodes: Vec<EpisodeStats>,
     pub total_steps: u64,
+    /// Name of the backend that produced the weights.
+    pub backend: &'static str,
 }
 
-/// Train a DQN on `trace` and return the learned parameters.
+/// Default network architecture when no artifact manifest dictates one
+/// (native-backend training from scratch).
+pub fn default_dims() -> (usize, usize, usize, usize) {
+    (STATE_DIM, 64, 64, crate::KEEP_ALIVE_ACTIONS.len())
+}
+
+/// Train a DQN on `trace` using the backend selected by `cfg.backend`,
+/// starting from the artifact set's initial parameters.
 pub fn train(
     artifacts: &ArtifactSet,
     runtime: &PjrtRuntime,
@@ -102,41 +149,73 @@ pub fn train(
     energy: &EnergyModel,
     cfg: &TrainerConfig,
 ) -> anyhow::Result<TrainReport> {
-    let dims = artifacts.manifest.dims();
-    anyhow::ensure!(cfg.batch == artifacts.manifest.train_batch, "batch mismatch with artifact");
+    cfg.validate()?;
+    let init = artifacts.init_params()?;
+    match cfg.backend {
+        BackendKind::Pjrt => {
+            let dims = artifacts.manifest.dims();
+            anyhow::ensure!(
+                cfg.batch == artifacts.manifest.train_batch,
+                "batch mismatch with artifact"
+            );
+            let exe = runtime.load_hlo_text(artifacts.train_step_path().to_str().unwrap())?;
+            let mut backend = PjrtBackend::new(TrainStep::new(exe, cfg.batch, dims), init);
+            train_loop(&mut backend, trace, ci, energy, cfg)
+        }
+        BackendKind::Native => {
+            let mut backend = NativeBackend::new(init, cfg.batch);
+            train_loop(&mut backend, trace, ci, energy, cfg)
+        }
+    }
+}
 
-    let exe = runtime.load_hlo_text(artifacts.train_step_path().to_str().unwrap())?;
-    let step_exe = TrainStep::new(exe, cfg.batch, dims);
+/// Train with the pure-Rust backend and no PJRT artifacts at all:
+/// deterministic He-uniform initial weights, [`default_dims`]
+/// architecture. This is the path CI and artifact-less machines use.
+pub fn train_native(
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    cfg: &TrainerConfig,
+) -> anyhow::Result<TrainReport> {
+    cfg.validate()?;
+    let init = QNetParams::he_uniform(default_dims(), cfg.seed);
+    let mut backend = NativeBackend::new(init, cfg.batch);
+    train_loop(&mut backend, trace, ci, energy, cfg)
+}
 
-    // Online/target weights live behind `Arc`: a target sync is a pointer
-    // copy (snapshots are immutable — gradient steps *replace* the online
-    // Arc), and episode rollouts fork the same Arc into shard agents
-    // without deep-copying the network.
-    let mut params = Arc::new(artifacts.init_params()?);
-    let mut target = Arc::clone(&params);
-    let mut m = QNetParams::zeros(dims);
-    let mut v = QNetParams::zeros(dims);
+/// The backend-agnostic training loop: rollouts, replay, gradient steps,
+/// target syncs, telemetry. All per-step state (sample buffers, params,
+/// moments) is preallocated — the loop itself performs no per-step heap
+/// allocation beyond what the backend's own step does.
+pub fn train_loop(
+    backend: &mut dyn TrainBackend,
+    trace: &Trace,
+    ci: &CarbonTrace,
+    energy: &EnergyModel,
+    cfg: &TrainerConfig,
+) -> anyhow::Result<TrainReport> {
+    cfg.validate()?;
 
     let mut replay = ReplayBuffer::new(cfg.replay_capacity);
     let mut rng = Rng::new(cfg.seed);
     let mut epsilon = cfg.epsilon_start;
     let mut t_step: u64 = 0;
     let mut episodes = Vec::with_capacity(cfg.episodes);
+    let mut batch = SampleBatch::new(cfg.batch);
 
-    // Flat sample buffers reused across steps.
-    let b = cfg.batch;
-    let mut s_buf = vec![0.0f32; b * STATE_DIM];
-    let mut a_buf = vec![0i32; b];
-    let mut r_buf = vec![0.0f32; b];
-    let mut ns_buf = vec![0.0f32; b * STATE_DIM];
-    let mut d_buf = vec![0.0f32; b];
+    // Per-step wall-clock telemetry (µs histogram); the Instant reads are
+    // gated on an installed obs sink so the hot loop stays untimed when
+    // observability is off.
+    let obs_on = crate::obs::enabled();
+    let mut step_hist = crate::obs::Hist::new();
 
     let lambda_grid = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
 
     // One agent reused across episodes (keeps its pending-map capacity);
-    // weights are swapped in per episode via the shared Arc.
+    // weights are swapped in per episode from the backend's snapshot.
     let mut agent =
-        EpsilonGreedyAgent::new(NativeMlp::from_arc(Arc::clone(&params)), epsilon, cfg.seed);
+        EpsilonGreedyAgent::new(NativeMlp::from_arc(backend.snapshot()), epsilon, cfg.seed);
 
     for ep in 0..cfg.episodes {
         let lambda = cfg
@@ -149,7 +228,7 @@ pub fn train(
         agent.reset_episode();
         agent.reseed(cfg.seed ^ ep as u64);
         agent.epsilon = epsilon;
-        agent.set_mlp(NativeMlp::from_arc(Arc::clone(&params)));
+        agent.set_mlp(NativeMlp::from_arc(backend.snapshot()));
         let sim_cfg = SimConfig { lambda_carbon: lambda, ..SimConfig::default() };
         let sim = ShardedSimulator::new(trace, ci, energy.clone(), sim_cfg);
         let roll_span = crate::obs::span("trainer/rollout");
@@ -165,38 +244,30 @@ pub fn train(
         // --- Gradient steps.
         let mut loss_sum = 0.0f32;
         let mut loss_n = 0u32;
-        if replay.len() >= b {
+        let grad_t0 = Instant::now();
+        if replay.len() >= cfg.batch {
             let _grad_span = crate::obs::span("trainer/gradient-steps");
             for _ in 0..cfg.steps_per_episode {
-                replay.sample_into(
-                    &mut rng, b, &mut s_buf, &mut a_buf, &mut r_buf, &mut ns_buf,
-                    &mut d_buf,
-                );
+                replay.sample_batch(&mut rng, &mut batch);
                 t_step += 1;
-                let out = step_exe.step(
-                    &params,
-                    &target,
-                    &m,
-                    &v,
-                    t_step as f32,
-                    &s_buf,
-                    &a_buf,
-                    &r_buf,
-                    &ns_buf,
-                    &d_buf,
-                )?;
-                params = Arc::new(out.params);
-                m = out.m;
-                v = out.v;
-                loss_sum += out.loss;
+                let step_t0 = obs_on.then(Instant::now);
+                let loss = backend.step(t_step, &batch)?;
+                if let Some(t0) = step_t0 {
+                    step_hist.record(t0.elapsed().as_secs_f64() * 1e6);
+                }
+                loss_sum += loss;
                 loss_n += 1;
                 if t_step % cfg.target_sync_steps as u64 == 0 {
-                    // Pointer copy: the old online snapshot becomes the
-                    // target; no parameter deep-clone on the sync path.
-                    target = Arc::clone(&params);
+                    backend.sync_target();
                 }
             }
         }
+        let grad_elapsed = grad_t0.elapsed().as_secs_f64();
+        let grad_steps_per_s = if loss_n > 0 && grad_elapsed > 0.0 {
+            loss_n as f64 / grad_elapsed
+        } else {
+            0.0
+        };
 
         let stats = EpisodeStats {
             episode: ep,
@@ -205,6 +276,7 @@ pub fn train(
             transitions: n_tr,
             mean_loss: if loss_n > 0 { loss_sum / loss_n as f32 } else { f32::NAN },
             episode_reward,
+            grad_steps_per_s,
         };
         if cfg.verbose {
             println!(
@@ -221,16 +293,17 @@ pub fn train(
         epsilon = (epsilon * cfg.epsilon_decay).max(cfg.epsilon_min);
     }
 
-    // --- Telemetry: per-episode loss/ε/λ/reward series (no-op when no
-    // obs sink is installed).
+    // --- Telemetry: per-episode loss/ε/λ/reward/throughput series plus
+    // the per-step latency histogram (no-op when no obs sink installed).
     if let Some(sink) = crate::obs::sink() {
         use crate::util::json::Json;
         sink.add_counter("train/episodes", episodes.len() as u64);
         sink.add_counter("train/gradient_steps", t_step);
-        let mut lines = Vec::with_capacity(episodes.len() + 1);
+        let mut lines = Vec::with_capacity(episodes.len() + 2);
         lines.push(Json::obj(vec![
             ("kind", "meta".into()),
             ("stream", "train".into()),
+            ("backend", backend.name().into()),
             ("episodes", (episodes.len() as u64).into()),
             ("gradient_steps", t_step.into()),
         ]));
@@ -245,19 +318,17 @@ pub fn train(
                 // filling) — export as null, not invalid bare NaN.
                 ("td_loss", Json::num_or_null(s.mean_loss as f64)),
                 ("reward", s.episode_reward.into()),
+                ("grad_steps_per_s", s.grad_steps_per_s.into()),
             ]));
         }
+        lines.push(step_hist.to_json("step_us"));
         if let Err(e) = sink.emit_jsonl("train", &lines) {
             eprintln!("[obs] failed to write train telemetry: {e}");
         }
     }
 
-    // Release the other Arc holders (agent's MLP, target snapshot) so the
-    // final weights unwrap without a deep clone.
-    drop(agent);
-    drop(target);
-    let params = Arc::try_unwrap(params).unwrap_or_else(|a| (*a).clone());
-    Ok(TrainReport { params, episodes, total_steps: t_step })
+    let params = backend.params().clone();
+    Ok(TrainReport { params, episodes, total_steps: t_step, backend: backend.name() })
 }
 
 /// Train and persist the weights into the artifact directory.
@@ -276,4 +347,43 @@ pub fn train_and_save(
         println!("[train] saved weights to {}", path.display());
     }
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_and_smoke_configs_validate() {
+        TrainerConfig::default().validate().unwrap();
+        TrainerConfig::smoke().validate().unwrap();
+    }
+
+    #[test]
+    fn zero_target_sync_steps_is_rejected() {
+        let cfg = TrainerConfig { target_sync_steps: 0, ..TrainerConfig::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("target_sync_steps"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        for cfg in [
+            TrainerConfig { episodes: 0, ..TrainerConfig::default() },
+            TrainerConfig { batch: 0, ..TrainerConfig::default() },
+            TrainerConfig { replay_capacity: 8, batch: 64, ..TrainerConfig::default() },
+            TrainerConfig { epsilon_decay: 0.0, ..TrainerConfig::default() },
+            TrainerConfig { epsilon_decay: 1.5, ..TrainerConfig::default() },
+        ] {
+            assert!(cfg.validate().is_err(), "{cfg:?} should not validate");
+        }
+    }
+
+    #[test]
+    fn default_dims_match_manifest_convention() {
+        let (d, h1, h2, a) = default_dims();
+        assert_eq!(d, STATE_DIM);
+        assert_eq!((h1, h2), (64, 64));
+        assert_eq!(a, crate::KEEP_ALIVE_ACTIONS.len());
+    }
 }

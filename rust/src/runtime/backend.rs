@@ -1,0 +1,94 @@
+//! PJRT implementation of [`TrainBackend`]: drives the AOT-compiled
+//! `dqn_train_step` executable with double-buffered host state.
+//!
+//! Earlier trainer versions rebuilt `Arc<QNetParams>` and moved fresh
+//! `m`/`v` tensors out of the executable wrapper on every gradient step.
+//! Here the online params and both Adam moments live in two preallocated
+//! [`TrainState`] buffers: each step decodes the executable outputs into
+//! the spare buffer ([`TrainStep::step_into`]) and swaps — no per-step
+//! `QNetParams::zeros`. The literal-decode `Vec`s inside the `xla` crate
+//! boundary are the one remaining allocation (the fully allocation-free
+//! path is [`crate::rl::native_train::NativeBackend`]).
+
+use crate::rl::backend::TrainBackend;
+use crate::rl::qnet::QNetParams;
+use crate::rl::replay::SampleBatch;
+use crate::runtime::executable::TrainStep;
+use std::sync::Arc;
+
+/// One buffer generation: online params + Adam first/second moments.
+#[derive(Debug)]
+struct TrainState {
+    p: QNetParams,
+    m: QNetParams,
+    v: QNetParams,
+}
+
+impl TrainState {
+    fn zeros(dims: (usize, usize, usize, usize)) -> Self {
+        TrainState {
+            p: QNetParams::zeros(dims),
+            m: QNetParams::zeros(dims),
+            v: QNetParams::zeros(dims),
+        }
+    }
+}
+
+/// [`TrainBackend`] over the PJRT `dqn_train_step` executable.
+pub struct PjrtBackend {
+    exe: TrainStep,
+    /// Current generation (read side of the next step).
+    cur: TrainState,
+    /// Spare generation the next step decodes into before the swap.
+    next: TrainState,
+    target: QNetParams,
+}
+
+impl PjrtBackend {
+    /// Start from `init` (online and target both set to it, zero moments).
+    pub fn new(exe: TrainStep, init: QNetParams) -> Self {
+        let dims = init.dims;
+        let mut cur = TrainState::zeros(dims);
+        cur.p.copy_from(&init);
+        PjrtBackend { exe, cur, next: TrainState::zeros(dims), target: init }
+    }
+
+    /// Adam moments (cross-backend agreement tests).
+    pub fn moments(&self) -> (&QNetParams, &QNetParams) {
+        (&self.cur.m, &self.cur.v)
+    }
+}
+
+impl TrainBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn step(&mut self, t: u64, batch: &SampleBatch) -> anyhow::Result<f32> {
+        let loss = self.exe.step_into(
+            &self.cur.p,
+            &self.target,
+            &self.cur.m,
+            &self.cur.v,
+            t as f32,
+            batch,
+            &mut self.next.p,
+            &mut self.next.m,
+            &mut self.next.v,
+        )?;
+        std::mem::swap(&mut self.cur, &mut self.next);
+        Ok(loss)
+    }
+
+    fn sync_target(&mut self) {
+        self.target.copy_from(&self.cur.p);
+    }
+
+    fn snapshot(&self) -> Arc<QNetParams> {
+        Arc::new(self.cur.p.clone())
+    }
+
+    fn params(&self) -> &QNetParams {
+        &self.cur.p
+    }
+}

@@ -4,6 +4,7 @@
 //! `dqn_train_step`).
 
 use crate::rl::qnet::QNetParams;
+use crate::rl::replay::SampleBatch;
 use crate::runtime::client::{
     literal_f32, literal_i32, literal_scalar_f32, to_f32_vec, Executable,
 };
@@ -29,6 +30,20 @@ fn params_from_literals(
         *dst = v;
     }
     Ok(p)
+}
+
+/// Copy 6 consecutive output literals into an existing [`QNetParams`],
+/// reusing its buffers (the per-step path of
+/// [`crate::runtime::backend::PjrtBackend`] — no fresh `zeros` per step;
+/// the decode `Vec` from the literal API is the one allocation left).
+fn params_from_literals_into(lits: &[xla::Literal], p: &mut QNetParams) -> anyhow::Result<()> {
+    anyhow::ensure!(lits.len() >= 6, "expected ≥6 literals");
+    for (dst, lit) in p.tensors_mut().into_iter().zip(lits.iter()) {
+        let v = to_f32_vec(lit)?;
+        anyhow::ensure!(v.len() == dst.len(), "tensor size mismatch");
+        dst.copy_from_slice(&v);
+    }
+    Ok(())
 }
 
 /// Batched Q-network inference executable (`dqn_infer_b{N}.hlo.txt`).
@@ -129,5 +144,54 @@ impl TrainStep {
                 .copied()
                 .ok_or_else(|| anyhow::anyhow!("empty loss output"))?,
         })
+    }
+
+    /// Like [`step`](Self::step), but samples come from a [`SampleBatch`]
+    /// and the returned params/moments are written into existing buffers
+    /// instead of freshly-allocated [`QNetParams`] — the per-step path of
+    /// [`crate::runtime::backend::PjrtBackend`]. Returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_into(
+        &self,
+        params: &QNetParams,
+        target: &QNetParams,
+        m: &QNetParams,
+        v: &QNetParams,
+        t: f32,
+        batch: &SampleBatch,
+        out_params: &mut QNetParams,
+        out_m: &mut QNetParams,
+        out_v: &mut QNetParams,
+    ) -> anyhow::Result<f32> {
+        let b = self.batch;
+        let d = self.dims.0;
+        anyhow::ensure!(
+            batch.batch == b,
+            "SampleBatch size {} != executable batch {b}",
+            batch.batch
+        );
+        anyhow::ensure!(batch.states.len() == b * d && batch.next_states.len() == b * d);
+
+        let mut inputs = Vec::with_capacity(30);
+        inputs.extend(param_literals(params)?);
+        inputs.extend(param_literals(target)?);
+        inputs.extend(param_literals(m)?);
+        inputs.extend(param_literals(v)?);
+        inputs.push(literal_scalar_f32(t));
+        inputs.push(literal_f32(&batch.states, &[b, d])?);
+        inputs.push(literal_i32(&batch.actions));
+        inputs.push(literal_f32(&batch.rewards, &[b])?);
+        inputs.push(literal_f32(&batch.next_states, &[b, d])?);
+        inputs.push(literal_f32(&batch.dones, &[b])?);
+
+        let out = self.exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 19, "expected 19 outputs, got {}", out.len());
+        params_from_literals_into(&out[0..6], out_params)?;
+        params_from_literals_into(&out[6..12], out_m)?;
+        params_from_literals_into(&out[12..18], out_v)?;
+        to_f32_vec(&out[18])?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("empty loss output"))
     }
 }

@@ -7,9 +7,11 @@
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
 
 pub mod artifacts;
+pub mod backend;
 pub mod client;
 pub mod executable;
 
 pub use artifacts::ArtifactSet;
+pub use backend::PjrtBackend;
 pub use client::{Executable, PjrtRuntime};
 pub use executable::{QNetInfer, TrainStep};

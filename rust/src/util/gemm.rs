@@ -1,0 +1,300 @@
+//! Shared f32 GEMM / GEMV kernels for the Q-network hot paths.
+//!
+//! One register-blocked accumulation kernel ([`axpy`], 4 independent lanes,
+//! no loop-carried dependency, autovectorizer-friendly) backs both the
+//! per-decision inference path ([`crate::policy::native_mlp`], via
+//! [`linear`]) and the batched training path
+//! ([`crate::rl::native_train`], via [`gemm_bias`] and the backward
+//! kernels). At the network's dims (64×64 f32 tiles) every operand is
+//! L1-resident, so the blocking that matters is the 4-wide register tile —
+//! there is no cache-level tiling to do.
+//!
+//! Numerics contract: [`gemm_bias`] applies [`linear`] row by row, so a
+//! 1-row GEMM is **bit-identical** to the historical `NativeMlp` forward
+//! (per-lane FP order unchanged) — the sharded-simulator bit-identity
+//! property tests depend on this.
+
+/// y += a * x, accumulated in 4-wide register blocks. Preserves per-lane
+/// FP order (lane j only ever accumulates `a * x[j]`), so unrolling does
+/// not change results vs the scalar loop.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut yc = y.chunks_exact_mut(4);
+    let mut xc = x.chunks_exact(4);
+    for (yj, xj) in (&mut yc).zip(&mut xc) {
+        yj[0] += a * xj[0];
+        yj[1] += a * xj[1];
+        yj[2] += a * xj[2];
+        yj[3] += a * xj[3];
+    }
+    for (yj, &xj) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yj += a * xj;
+    }
+}
+
+/// Dot product with 4 independent accumulator lanes (folded pairwise at
+/// the end). Deterministic: the operation order is fixed, so results are
+/// bit-identical across runs.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let mut ac = a.chunks_exact(4);
+    let mut bc = b.chunks_exact(4);
+    for (x4, y4) in (&mut ac).zip(&mut bc) {
+        acc[0] += x4[0] * y4[0];
+        acc[1] += x4[1] * y4[1];
+        acc[2] += x4[2] * y4[2];
+        acc[3] += x4[3] * y4[3];
+    }
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        acc[0] += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// y = x @ W + b for one row. W is row-major `[in, out]`. Accumulates
+/// row-wise so the inner loop streams W sequentially (cache-friendly for
+/// row-major weights); zero inputs are skipped (ReLU sparsity).
+#[inline]
+pub fn linear(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
+    let n_out = y.len();
+    debug_assert_eq!(w.len(), x.len() * n_out);
+    y.copy_from_slice(b);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // ReLU sparsity: skip zeroed activations
+        }
+        axpy(xi, &w[i * n_out..(i + 1) * n_out], y);
+    }
+}
+
+/// y = relu(x @ W + b) for one row.
+#[inline]
+pub fn linear_relu(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32]) {
+    linear(x, w, b, y);
+    relu(y);
+}
+
+/// Clamp negatives to zero in place.
+#[inline]
+pub fn relu(y: &mut [f32]) {
+    for v in y.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Y = X @ W + b, batched: X is `[rows, d_in]`, W row-major
+/// `[d_in, d_out]`, b `[d_out]`, Y `[rows, d_out]` — all row-major flat
+/// slices. Each row goes through [`linear`], so a 1-row call is
+/// bit-identical to the inference path.
+pub fn gemm_bias(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(b.len(), d_out);
+    debug_assert_eq!(y.len(), rows * d_out);
+    for r in 0..rows {
+        linear(
+            &x[r * d_in..(r + 1) * d_in],
+            w,
+            b,
+            &mut y[r * d_out..(r + 1) * d_out],
+        );
+    }
+}
+
+/// GW = Xᵀ @ dY (weight gradient): X `[rows, d_in]`, dY `[rows, d_out]`,
+/// GW row-major `[d_in, d_out]`, overwritten. Accumulates row-by-row with
+/// the same [`axpy`] kernel as the forward pass; zero activations are
+/// skipped (exact — their contribution is identically zero).
+pub fn grad_weights(x: &[f32], dy: &[f32], gw: &mut [f32], rows: usize, d_in: usize, d_out: usize) {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(gw.len(), d_in * d_out);
+    gw.fill(0.0);
+    for r in 0..rows {
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        let dyr = &dy[r * d_out..(r + 1) * d_out];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            axpy(xi, dyr, &mut gw[i * d_out..(i + 1) * d_out]);
+        }
+    }
+}
+
+/// gb = column sums of dY (bias gradient): dY `[rows, d_out]`, gb
+/// `[d_out]`, overwritten.
+pub fn grad_bias(dy: &[f32], gb: &mut [f32], rows: usize, d_out: usize) {
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(gb.len(), d_out);
+    gb.fill(0.0);
+    for r in 0..rows {
+        let dyr = &dy[r * d_out..(r + 1) * d_out];
+        for (g, &d) in gb.iter_mut().zip(dyr.iter()) {
+            *g += d;
+        }
+    }
+}
+
+/// dX = dY @ Wᵀ (input gradient): dY `[rows, d_out]`, W row-major
+/// `[d_in, d_out]`, dX `[rows, d_in]`, overwritten. Both operands of the
+/// inner [`dot`] stream contiguously (dY rows and W rows).
+pub fn gemm_wt(dy: &[f32], w: &[f32], dx: &mut [f32], rows: usize, d_in: usize, d_out: usize) {
+    debug_assert_eq!(dy.len(), rows * d_out);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(dx.len(), rows * d_in);
+    for r in 0..rows {
+        let dyr = &dy[r * d_out..(r + 1) * d_out];
+        let dxr = &mut dx[r * d_in..(r + 1) * d_in];
+        for (i, out) in dxr.iter_mut().enumerate() {
+            *out = dot(dyr, &w[i * d_out..(i + 1) * d_out]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 0.5) as f32).collect()
+    }
+
+    /// Naive f64 references for every kernel.
+    fn ref_gemm_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        rows: usize,
+        d_in: usize,
+        d_out: usize,
+    ) -> Vec<f64> {
+        let mut y = vec![0.0f64; rows * d_out];
+        for r in 0..rows {
+            for j in 0..d_out {
+                let mut acc = b[j] as f64;
+                for i in 0..d_in {
+                    acc += x[r * d_in + i] as f64 * w[i * d_out + j] as f64;
+                }
+                y[r * d_out + j] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn gemm_bias_matches_f64_reference() {
+        let mut rng = Rng::new(41);
+        let (rows, d_in, d_out) = (7, 10, 13);
+        let x = randv(&mut rng, rows * d_in);
+        let w = randv(&mut rng, d_in * d_out);
+        let b = randv(&mut rng, d_out);
+        let mut y = vec![0.0f32; rows * d_out];
+        gemm_bias(&x, &w, &b, &mut y, rows, d_in, d_out);
+        let want = ref_gemm_bias(&x, &w, &b, rows, d_in, d_out);
+        for (g, w) in y.iter().zip(want.iter()) {
+            assert!((*g as f64 - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gemm_single_row_bit_identical_to_linear() {
+        let mut rng = Rng::new(42);
+        let (d_in, d_out) = (10, 64);
+        let x = randv(&mut rng, d_in);
+        let w = randv(&mut rng, d_in * d_out);
+        let b = randv(&mut rng, d_out);
+        let mut y_row = vec![0.0f32; d_out];
+        linear(&x, &w, &b, &mut y_row);
+        let mut y_gemm = vec![0.0f32; d_out];
+        gemm_bias(&x, &w, &b, &mut y_gemm, 1, d_in, d_out);
+        assert!(
+            y_row.iter().zip(y_gemm.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "batched kernel must be bit-identical to the row kernel"
+        );
+    }
+
+    #[test]
+    fn grad_weights_matches_f64_reference() {
+        let mut rng = Rng::new(43);
+        let (rows, d_in, d_out) = (9, 6, 11);
+        let x = randv(&mut rng, rows * d_in);
+        let dy = randv(&mut rng, rows * d_out);
+        let mut gw = vec![1.0f32; d_in * d_out]; // must be overwritten
+        grad_weights(&x, &dy, &mut gw, rows, d_in, d_out);
+        for i in 0..d_in {
+            for j in 0..d_out {
+                let mut acc = 0.0f64;
+                for r in 0..rows {
+                    acc += x[r * d_in + i] as f64 * dy[r * d_out + j] as f64;
+                }
+                let got = gw[i * d_out + j] as f64;
+                assert!((got - acc).abs() < 1e-4, "gw[{i},{j}] {got} vs {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_bias_matches_column_sums() {
+        let mut rng = Rng::new(44);
+        let (rows, d_out) = (8, 5);
+        let dy = randv(&mut rng, rows * d_out);
+        let mut gb = vec![9.0f32; d_out];
+        grad_bias(&dy, &mut gb, rows, d_out);
+        for j in 0..d_out {
+            let want: f64 = (0..rows).map(|r| dy[r * d_out + j] as f64).sum();
+            assert!((gb[j] as f64 - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemm_wt_matches_f64_reference() {
+        let mut rng = Rng::new(45);
+        let (rows, d_in, d_out) = (6, 12, 7);
+        let dy = randv(&mut rng, rows * d_out);
+        let w = randv(&mut rng, d_in * d_out);
+        let mut dx = vec![0.0f32; rows * d_in];
+        gemm_wt(&dy, &w, &mut dx, rows, d_in, d_out);
+        for r in 0..rows {
+            for i in 0..d_in {
+                let mut acc = 0.0f64;
+                for j in 0..d_out {
+                    acc += dy[r * d_out + j] as f64 * w[i * d_out + j] as f64;
+                }
+                let got = dx[r * d_in + i] as f64;
+                assert!((got - acc).abs() < 1e-4, "dx[{r},{i}] {got} vs {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in [0usize, 1, 3, 4, 5, 8, 13] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![2.0f32; n];
+            let want: f32 = (0..n).map(|i| 2.0 * i as f32).sum();
+            assert_eq!(dot(&a, &b), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn relu_clamps_in_place() {
+        let mut y = vec![-1.0f32, 0.0, 2.5, -0.0];
+        relu(&mut y);
+        assert_eq!(y, vec![0.0, 0.0, 2.5, -0.0]);
+    }
+}

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod csv;
+pub mod gemm;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

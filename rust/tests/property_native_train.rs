@@ -1,0 +1,169 @@
+//! Cross-backend training properties: the pure-Rust `rl::native_train`
+//! step must match the AOT PJRT `dqn_train_step` to ≤1e-5 on params and
+//! loss over ≥100 shared minibatches (artifacts-gated), and native
+//! training must be bit-identical across reruns with the same seed.
+
+use lace_rl::carbon::synth::{synth_region, Region};
+use lace_rl::energy::model::EnergyModel;
+use lace_rl::rl::backend::TrainBackend;
+use lace_rl::rl::encoder::STATE_DIM;
+use lace_rl::rl::native_train::NativeBackend;
+use lace_rl::rl::replay::SampleBatch;
+use lace_rl::rl::trainer::{self, TrainerConfig};
+use lace_rl::runtime::backend::PjrtBackend;
+use lace_rl::runtime::{artifacts, ArtifactSet, PjrtRuntime, TrainStep};
+use lace_rl::trace::synth::{SynthConfig, TraceGenerator};
+use lace_rl::util::rng::Rng;
+
+fn open() -> Option<(ArtifactSet, PjrtRuntime)> {
+    let dir = artifacts::default_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping cross-backend agreement test");
+        return None;
+    }
+    let art = ArtifactSet::open(&dir).expect("artifact set");
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    Some((art, rt))
+}
+
+/// Random replay-shaped minibatch (both backends consume it verbatim).
+fn synthetic_batch(rng: &mut Rng, batch: usize, n_actions: usize) -> SampleBatch {
+    let mut sb = SampleBatch::new(batch);
+    for x in sb.states.iter_mut() {
+        *x = rng.f64() as f32;
+    }
+    for x in sb.next_states.iter_mut() {
+        *x = rng.f64() as f32;
+    }
+    for a in sb.actions.iter_mut() {
+        *a = rng.index(n_actions) as i32;
+    }
+    for r in sb.rewards.iter_mut() {
+        *r = -(rng.f64() as f32) * 2.0;
+    }
+    for d in sb.dones.iter_mut() {
+        *d = if rng.chance(0.15) { 1.0 } else { 0.0 };
+    }
+    sb
+}
+
+#[test]
+fn native_matches_pjrt_params_and_loss_over_100_steps() {
+    let Some((art, rt)) = open() else { return };
+    let dims = art.manifest.dims();
+    let b = art.manifest.train_batch;
+    assert_eq!(dims.0, STATE_DIM, "manifest state_dim must match encoder");
+    let init = art.init_params().unwrap();
+
+    let step = TrainStep::new(
+        rt.load_hlo_text(art.train_step_path().to_str().unwrap()).unwrap(),
+        b,
+        dims,
+    );
+    let mut pjrt = PjrtBackend::new(step, init.clone());
+    let mut native = NativeBackend::new(init, b);
+
+    let mut rng = Rng::new(7);
+    let mut worst_params = 0.0f32;
+    let mut worst_loss = 0.0f32;
+    for t in 1..=120u64 {
+        let sb = synthetic_batch(&mut rng, b, dims.3);
+        let loss_pjrt = pjrt.step(t, &sb).unwrap();
+        let loss_native = native.step(t, &sb).unwrap();
+        worst_loss = worst_loss.max((loss_pjrt - loss_native).abs());
+        worst_params = worst_params.max(pjrt.params().max_abs_diff(native.params()));
+        // Sync both on the same cadence, mid-run, so target divergence
+        // would compound and get caught.
+        if t % 25 == 0 {
+            pjrt.sync_target();
+            native.sync_target();
+        }
+    }
+    assert!(
+        worst_params <= 1e-5,
+        "params diverged between backends: max |Δ| = {worst_params:e}"
+    );
+    assert!(worst_loss <= 1e-5, "loss diverged between backends: max |Δ| = {worst_loss:e}");
+}
+
+#[test]
+fn native_training_bit_identical_across_reruns() {
+    // No artifacts required: this is the determinism half of the
+    // tentpole's acceptance criteria, over >100 steps with target syncs.
+    let run = || {
+        let init = lace_rl::rl::qnet::QNetParams::he_uniform(trainer::default_dims(), 41);
+        let mut backend = NativeBackend::new(init, 64);
+        let mut rng = Rng::new(13);
+        let mut losses = Vec::new();
+        for t in 1..=110u64 {
+            let sb = synthetic_batch(&mut rng, 64, trainer::default_dims().3);
+            losses.push(backend.step(t, &sb).unwrap());
+            if t % 30 == 0 {
+                backend.sync_target();
+            }
+        }
+        (backend.params().clone(), losses)
+    };
+    let (pa, la) = run();
+    let (pb, lb) = run();
+    assert_eq!(pa.max_abs_diff(&pb), 0.0, "params must be bit-identical across reruns");
+    assert!(
+        la.iter().zip(lb.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "per-step losses must be bit-identical across reruns"
+    );
+}
+
+#[test]
+fn native_trainer_smoke_end_to_end() {
+    // The full trainer loop (rollout → replay → gradient steps → target
+    // syncs) on the native backend, twice, without any PJRT artifacts:
+    // must run, must learn on *something* (nonzero steps), and must be
+    // exactly reproducible.
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 20,
+        duration_s: 1_800.0,
+        target_invocations: 4_000,
+        seed: 55,
+        ..SynthConfig::default()
+    })
+    .generate();
+    let ci = synth_region(Region::SolarHeavy, 1, 55);
+    let energy = EnergyModel::default();
+    let cfg = TrainerConfig {
+        lambda_carbon: Some(0.5),
+        seed: 55,
+        ..TrainerConfig::smoke()
+    };
+
+    let a = trainer::train_native(&trace, &ci, &energy, &cfg).unwrap();
+    let b = trainer::train_native(&trace, &ci, &energy, &cfg).unwrap();
+
+    assert_eq!(a.backend, "native");
+    assert!(a.total_steps > 0, "smoke schedule must run gradient steps");
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(
+        a.params.max_abs_diff(&b.params),
+        0.0,
+        "native end-to-end training must be reproducible"
+    );
+    assert!(a.episodes.iter().all(|e| e.grad_steps_per_s >= 0.0));
+}
+
+#[test]
+fn trainer_config_rejects_zero_target_sync_before_training() {
+    // The modulo-by-zero guard must fire at validation time, not deep in
+    // the gradient loop.
+    let trace = TraceGenerator::new(SynthConfig {
+        n_functions: 5,
+        duration_s: 600.0,
+        target_invocations: 500,
+        seed: 3,
+        ..SynthConfig::default()
+    })
+    .generate();
+    let ci = synth_region(Region::SolarHeavy, 1, 3);
+    let energy = EnergyModel::default();
+    let cfg = TrainerConfig { target_sync_steps: 0, ..TrainerConfig::smoke() };
+    let err = trainer::train_native(&trace, &ci, &energy, &cfg).unwrap_err();
+    assert!(err.to_string().contains("target_sync_steps"), "got: {err:#}");
+}

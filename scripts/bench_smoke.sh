@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Perf smoke: lint + doc gates plus a shrunken sim_throughput run that
-# writes BENCH_sim.json (median ns + invocations/s per label). Run from
-# anywhere; commit BENCH_sim.json deltas alongside perf PRs and eyeball the
-# trajectory (EXPERIMENTS.md §Perf).
+# Perf smoke: lint + doc gates plus shrunken sim_throughput and
+# train_throughput runs that write BENCH_sim.json / BENCH_train.json
+# (median ns + throughput per label). Run from anywhere; commit the
+# BENCH_*.json deltas alongside perf PRs and eyeball the trajectory
+# (EXPERIMENTS.md §Perf).
 #
 #   SKIP_LINT=1 scripts/bench_smoke.sh   # benches only, no fmt/clippy/doc
 set -euo pipefail
@@ -65,6 +66,35 @@ if prev and fixed:
     if delta > 2.0:
         print("warning: disabled-sink sim/fixed-60s regressed >2% — "
               "check the obs guards before merging")
+EOF
+
+# Train-step throughput: native always, PJRT rows when artifacts exist.
+# The native-vs-PJRT agreement gate (params/loss ≤1e-5 over 100 shared
+# minibatches) runs *inside* the bench binary and exits nonzero on
+# divergence, so a wrong-but-fast step can never land a bench row.
+echo "== bench: train_throughput --smoke =="
+cargo bench --bench train_throughput -- --smoke
+
+if [[ -f BENCH_train.json ]]; then
+    echo "== BENCH_train.json =="
+    cat BENCH_train.json
+else
+    echo "error: bench did not write BENCH_train.json" >&2
+    exit 1
+fi
+python3 - <<'EOF'
+import json
+doc = json.load(open("BENCH_train.json"))
+benches = doc.get("benches", {})
+native = benches.get("train/step-native")
+if not native:
+    raise SystemExit("error: BENCH_train.json has no train/step-native row")
+pjrt = benches.get("train/step-pjrt")
+if pjrt:
+    ratio = native["throughput_per_s"] / pjrt["throughput_per_s"]
+    print(f"native/pjrt sample-throughput ratio: {ratio:.2f}x")
+else:
+    print("(no PJRT artifacts; native rows only)")
 EOF
 
 # Sharded replay must be a pure speedup: the same simulate run forced
